@@ -1,0 +1,46 @@
+"""Shared benchmark scaffolding.
+
+Datasets are reduced-scale synthetic analogues of the paper's Table 2
+(Netflix / MovieLens / Yahoo!Music) — same rating ranges and zipf structure,
+sizes scaled to stay CPU-friendly (DESIGN.md §8.4).  Every benchmark prints
+``name,us_per_call,derived`` CSV rows via `emit`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.data import synthetic as syn
+from repro.data.sparse import train_test_split
+
+SCALE_M, SCALE_N, SCALE_NNZ = 3000, 500, 150_000
+
+
+def datasets(scale=1.0):
+    out = {}
+    for name, spec, rmax in (("movielens", syn.MOVIELENS_LIKE, 5.0),
+                             ("netflix", syn.NETFLIX_LIKE, 5.0),
+                             ("yahoo", syn.YAHOO_LIKE, 100.0)):
+        s = dataclasses.replace(
+            spec, M=int(SCALE_M * scale), N=int(SCALE_N * scale),
+            nnz=int(SCALE_NNZ * scale))
+        rows, cols, vals, group = syn.generate(s, seed=hash(name) % 2**31)
+        rng = np.random.default_rng(0)
+        tr, te = train_test_split(rng, rows, cols, vals, 0.1)
+        out[name] = dict(spec=s, train=tr, test=te, group=group)
+    return out
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def timed(fn, *args, repeat=1, **kw):
+    import jax
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / repeat

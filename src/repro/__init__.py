@@ -1,0 +1,7 @@
+"""repro — LSH-MF: LSH-aggregated nonlinear neighbourhood matrix
+factorization (Li et al. 2021) as a multi-pod JAX framework.
+
+Subpackages: core (the paper), data, dist, train, models (LM substrate),
+configs, launch, kernels (Pallas TPU). See README.md / DESIGN.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,63 @@
+"""Neighbour-selection baselines the paper compares simLSH against (Fig. 7 /
+Table 7): random-K, RP_cos (cosine random-projection LSH), and minHash
+(Jaccard).  All emit the same J^K [N, K] interface as simLSH so they drop
+into the identical CULSH-MF trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk
+from repro.core.simlsh import SimLSHConfig, pack_bits, phi_rows
+from repro.data.sparse import SparseMatrix
+
+
+def rand_topk(key: jax.Array, N: int, K: int) -> jax.Array:
+    """The paper's randomized control group: K uniform items per row."""
+    self_id = jnp.arange(N, dtype=jnp.int32)[:, None]
+    r = jax.random.randint(key, (N, K), 0, N, jnp.int32)
+    return jnp.where(r == self_id, (r + 1) % N, r)
+
+
+def rp_cos_signatures(sp: SparseMatrix, cfg: SimLSHConfig, key: jax.Array):
+    """RP_cos: sign(Σ_{i∈Ω̂_j} r_ij · g_i) with *unweighted* Gaussian-like
+    projections (Ψ = identity, Φ ~ Rademacher ≈ sign-of-Gaussian) — i.e.
+    simLSH without the Ψ rating-gap weighting.  [q, N] signatures."""
+
+    def one_band(band):
+        phi = phi_rows(key, band, sp.rows, cfg.sig_bits)
+        contrib = sp.vals[:, None] * phi
+        S = jax.ops.segment_sum(contrib, sp.cols, num_segments=sp.N)
+        return pack_bits(S >= 0)
+
+    return jax.lax.map(one_band, jnp.arange(cfg.q))
+
+
+def minhash_signatures(sp: SparseMatrix, cfg: SimLSHConfig, key: jax.Array):
+    """minHash over the *support* of each column (value-blind, the drawback
+    the paper calls out).  Each elementary hash = min over i∈Ω̂_j of a random
+    permutation value π(i); p such minima are packed into the band signature
+    (each min bucketed to G bits)."""
+
+    def one_hash(h):
+        kb = jax.random.fold_in(key, h)
+
+        def row_val(i):
+            return jax.random.randint(jax.random.fold_in(kb, i), (), 0,
+                                      jnp.iinfo(jnp.int32).max, jnp.int32)
+
+        pi = jax.vmap(row_val)(sp.rows)                 # [nnz]
+        mins = jax.ops.segment_min(pi, sp.cols, num_segments=sp.N)
+        return mins & ((1 << cfg.G) - 1)                # bucket to G bits
+
+    def one_band(band):
+        hs = jax.vmap(one_hash)(band * cfg.p + jnp.arange(cfg.p))  # [p, N]
+        shift = (2 ** (cfg.G * jnp.arange(cfg.p, dtype=jnp.int32)))[:, None]
+        return jnp.sum(hs.astype(jnp.int32) * shift, axis=0)
+
+    return jax.lax.map(one_band, jnp.arange(cfg.q))
+
+
+def signatures_topk(sigs: jax.Array, key: jax.Array, *, K: int, band_cap: int):
+    return topk.topk_from_signatures(sigs, key, K=K, band_cap=band_cap)

@@ -1,0 +1,70 @@
+"""GSM — the paper's O(N²) baseline (Definition 3.1, Table 1).
+
+S_{j1,j2} = n/(n+λ_ρ) · ρ_{j1,j2}, with ρ the Pearson similarity over
+co-rating rows and n = |Ω̂_{j1} ∩ Ω̂_{j2}|.
+
+Implemented *blocked*: the N×N similarity is produced tile-by-tile and only
+a running Top-K per row is kept, so the quadratic memory the paper complains
+about is streamed, never materialized (but the quadratic FLOPs remain — that
+is the point of the comparison in bench_topk_methods).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.sparse import SparseMatrix
+
+
+def _dense_cols(sp: SparseMatrix):
+    """Dense [M, N] value and indicator matrices (column-analysis layout)."""
+    X = jnp.zeros((sp.M, sp.N), jnp.float32).at[sp.rows, sp.cols].set(sp.vals)
+    B = jnp.zeros((sp.M, sp.N), jnp.float32).at[sp.rows, sp.cols].set(1.0)
+    return X, B
+
+
+@partial(jax.jit, static_argnames=("K", "block"))
+def gsm_topk(sp: SparseMatrix, *, K: int, lam_rho: float = 100.0,
+             block: int = 512) -> jax.Array:
+    """Exact shrunk-Pearson Top-K (J^K [N, K]) via blocked tiles."""
+    X, B = _dense_cols(sp)
+    cnt = jnp.maximum(B.sum(0), 1.0)
+    mean = X.sum(0) / cnt
+    Xc = (X - mean[None, :]) * B                       # centered, 0 at missing
+    X2 = Xc * Xc
+    N = sp.N
+    nblk = -(-N // block)
+    pad = nblk * block - N
+
+    Xc_p = jnp.pad(Xc, ((0, 0), (0, pad)))
+    B_p = jnp.pad(B, ((0, 0), (0, pad)))
+    X2_p = jnp.pad(X2, ((0, 0), (0, pad)))
+
+    def tile(start):
+        sl = jax.lax.dynamic_slice_in_dim(Xc_p, start, block, 1)   # [M, blk]
+        bl = jax.lax.dynamic_slice_in_dim(B_p, start, block, 1)
+        num = sl.T @ Xc                                 # Σ co-rated centered prod
+        n = bl.T @ B                                    # co-rating counts
+        d1 = bl.T @ X2                                  # Σ (r−m)² over co-rated, j2 side
+        d2 = jax.lax.dynamic_slice_in_dim(X2_p, start, block, 1).T @ B
+        # careful: denominator needs co-rated-only sums on both sides:
+        # d_j1 = Σ_{i∈both} (r_{i,j1}−m1)² = (X2 col j1)ᵀ B col j2  → that's d2[j1-row, j2]
+        rho = num / jnp.sqrt(jnp.maximum(d2 * d1, 1e-12))
+        S = n / (n + lam_rho) * rho
+        col_ids = jnp.arange(N)
+        row_ids = start + jnp.arange(block)
+        S = jnp.where(col_ids[None, :] == row_ids[:, None], -jnp.inf, S)  # no self
+        _, idx = jax.lax.top_k(S, K)
+        return idx.astype(jnp.int32)
+
+    idx = jax.lax.map(tile, jnp.arange(nblk) * block)   # [nblk, blk, K]
+    return idx.reshape(nblk * block, K)[:N]
+
+
+def gsm_flops_bytes(M: int, N: int, K: int):
+    """Hypothetical full-GSM cost (paper Fig. 1 / Table 7 'space overhead')."""
+    flops = 2.0 * M * N * N * 3           # three N×N gram products
+    bytes_full = 4.0 * N * N              # the materialized GSM the paper charges
+    return flops, bytes_full

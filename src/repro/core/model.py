@@ -1,0 +1,129 @@
+"""The nonlinear neighbourhood MF model — paper Eq. (1).
+
+r̂_ij = b̄_ij + |R^K(i;j)|^{-1/2} Σ_{j1∈R^K} (r_ij1 − b̄_ij1)·w_{j,k1}
+              + |N^K(i;j)|^{-1/2} Σ_{j2∈N^K} c_{j,k2}
+              + u_i·v_jᵀ
+
+with the CULSH-MF complement trick (paper §4.2(2)):
+S^K(j) = R^K(i;j) ⊎ N^K(i;j) — each of the K neighbours of j is *either*
+explicit (i rated it) or implicit, so every sample touches exactly K of the
+2K parameters {w_j, c_j}, the load-balance property the CUDA kernel relies
+on and that our fused Pallas kernel/TPU batch exploit identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.sparse import SparseMatrix, baselines, lookup
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Params:
+    U: jax.Array   # [M, F]
+    V: jax.Array   # [N, F]
+    b: jax.Array   # [M]
+    bh: jax.Array  # [N]
+    W: jax.Array   # [N, K]
+    C: jax.Array   # [N, K]
+    mu: jax.Array  # []
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Batch:
+    i: jax.Array        # [B] row ids
+    j: jax.Array        # [B] col ids
+    r: jax.Array        # [B] ratings
+    nb: jax.Array       # [B, K] neighbour ids (J^K[j])
+    rnb: jax.Array      # [B, K] r_{i, nb} (0 where unobserved)
+    expl: jax.Array     # [B, K] float mask: neighbour in R^K(i;j)
+    impl: jax.Array     # [B, K] float mask: neighbour in N^K(i;j)
+    valid: jax.Array    # [B] float mask (padding)
+
+
+def init_params(key, M, N, F, K, mu=0.0, scale=None) -> Params:
+    ku, kv = jax.random.split(key)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(F)
+    return Params(
+        U=jax.random.normal(ku, (M, F), jnp.float32) * scale,
+        V=jax.random.normal(kv, (N, F), jnp.float32) * scale,
+        b=jnp.zeros((M,), jnp.float32),
+        bh=jnp.zeros((N,), jnp.float32),
+        W=jnp.zeros((N, K), jnp.float32),
+        C=jnp.zeros((N, K), jnp.float32),
+        mu=jnp.asarray(mu, jnp.float32),
+    )
+
+
+def init_from_data(key, sp: SparseMatrix, F, K) -> Params:
+    mu, b, bh = baselines(sp)
+    p = init_params(key, sp.M, sp.N, F, K, mu=0.0)
+    return dataclasses.replace(p, mu=mu, b=b, bh=bh)
+
+
+def assemble(sp: SparseMatrix, JK: jax.Array, idx: jax.Array,
+             valid: jax.Array) -> Batch:
+    """Gather everything a training batch needs (rating lookups via the
+    sorted-key binary search — the TPU answer to the GPU hash probe)."""
+    i, j, r = sp.rows[idx], sp.cols[idx], sp.vals[idx]
+    nb = JK[j]                                              # [B, K]
+    rnb, hit = lookup(sp, jnp.broadcast_to(i[:, None], nb.shape), nb)
+    expl = hit.astype(jnp.float32)
+    impl = 1.0 - expl
+    return Batch(i, j, r, nb, rnb, expl, impl, valid.astype(jnp.float32))
+
+
+def predict(p: Params, bt: Batch):
+    """Eq. (1). Returns (pred [B], aux) with aux reused by the manual SGD."""
+    bbar = p.mu + p.b[bt.i] + p.bh[bt.j]                    # [B]
+    bbar_nb = p.mu + p.b[bt.i][:, None] + p.bh[bt.nb]       # [B, K]
+    resid = (bt.rnb - bbar_nb) * bt.expl                    # [B, K]
+    nR = jnp.sum(bt.expl, 1)
+    nN = jnp.sum(bt.impl, 1)
+    sR = jnp.where(nR > 0, jax.lax.rsqrt(jnp.maximum(nR, 1.0)), 0.0)
+    sN = jnp.where(nN > 0, jax.lax.rsqrt(jnp.maximum(nN, 1.0)), 0.0)
+    w_j, c_j = p.W[bt.j], p.C[bt.j]                         # [B, K]
+    expl_term = sR * jnp.sum(resid * w_j, 1)
+    impl_term = sN * jnp.sum(bt.impl * c_j, 1)
+    dot = jnp.sum(p.U[bt.i] * p.V[bt.j], 1)
+    pred = bbar + expl_term + impl_term + dot
+    return pred, dict(resid=resid, sR=sR, sN=sN)
+
+
+def predict_mf(p: Params, bt: Batch):
+    """Plain-MF prediction (the CUSGD++ model): r̂ = u_i·v_j."""
+    return jnp.sum(p.U[bt.i] * p.V[bt.j], 1)
+
+
+@partial(jax.jit, static_argnames=("batch", "mf_only"))
+def rmse(p: Params, sp_train: SparseMatrix, JK, rows, cols, vals, *,
+         batch: int = 8192, mf_only: bool = False):
+    """Test RMSE (Eq. 6).  Neighbour ratings come from the *train* matrix."""
+    n = rows.shape[0]
+    nb_batches = -(-n // batch)
+    pad = nb_batches * batch - n
+    rows_p = jnp.concatenate([rows, rows[:1].repeat(pad)])
+    cols_p = jnp.concatenate([cols, cols[:1].repeat(pad)])
+    vals_p = jnp.concatenate([vals, vals[:1].repeat(pad)])
+    valid = (jnp.arange(nb_batches * batch) < n).astype(jnp.float32)
+
+    def body(carry, s):
+        i = jax.lax.dynamic_slice_in_dim(rows_p, s, batch)
+        j = jax.lax.dynamic_slice_in_dim(cols_p, s, batch)
+        r = jax.lax.dynamic_slice_in_dim(vals_p, s, batch)
+        v = jax.lax.dynamic_slice_in_dim(valid, s, batch)
+        nb = JK[j]
+        rnb, hit = lookup(sp_train, jnp.broadcast_to(i[:, None], nb.shape), nb)
+        expl = hit.astype(jnp.float32)
+        bt = Batch(i, j, r, nb, rnb, expl, 1.0 - expl, v)
+        pred = predict_mf(p, bt) if mf_only else predict(p, bt)[0]
+        err = (r - pred) ** 2 * v
+        return carry + jnp.sum(err), None
+
+    sse, _ = jax.lax.scan(body, 0.0, jnp.arange(nb_batches) * batch)
+    return jnp.sqrt(sse / n)

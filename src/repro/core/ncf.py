@@ -1,0 +1,83 @@
+"""NCF baselines the paper compares against in Table 10 — GMF, MLP, NeuMF
+(He et al. 2017), implicit feedback with BCE loss and HR@K evaluation.
+
+Small, honest JAX implementations (autograd + Adam) — the point of the
+paper's Table 10 is wall-clock-to-quality vs CULSH-MF, reproduced by
+bench_ncf.py on synthetic implicit data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class NCFConfig:
+    M: int
+    N: int
+    F: int = 16
+    mlp_layers: tuple = (64, 32, 16)
+    kind: str = "neumf"  # gmf | mlp | neumf
+
+
+def init(cfg: NCFConfig, key):
+    ks = jax.random.split(key, 8)
+    s = 0.01
+    p = {}
+    if cfg.kind in ("gmf", "neumf"):
+        p["gmf_u"] = s * jax.random.normal(ks[0], (cfg.M, cfg.F))
+        p["gmf_v"] = s * jax.random.normal(ks[1], (cfg.N, cfg.F))
+        p["gmf_h"] = s * jax.random.normal(ks[2], (cfg.F,))
+    if cfg.kind in ("mlp", "neumf"):
+        p["mlp_u"] = s * jax.random.normal(ks[3], (cfg.M, cfg.F))
+        p["mlp_v"] = s * jax.random.normal(ks[4], (cfg.N, cfg.F))
+        dims = (2 * cfg.F,) + cfg.mlp_layers
+        p["mlp_w"] = [s * jax.random.normal(jax.random.fold_in(ks[5], li),
+                                            (dims[li], dims[li + 1]))
+                      for li in range(len(dims) - 1)]
+        p["mlp_b"] = [jnp.zeros((d,)) for d in dims[1:]]
+        p["mlp_h"] = s * jax.random.normal(ks[6], (cfg.mlp_layers[-1],))
+    return p
+
+
+def logits(p, cfg: NCFConfig, i, j):
+    parts = []
+    if cfg.kind in ("gmf", "neumf"):
+        parts.append((p["gmf_u"][i] * p["gmf_v"][j]) @ p["gmf_h"])
+    if cfg.kind in ("mlp", "neumf"):
+        x = jnp.concatenate([p["mlp_u"][i], p["mlp_v"][j]], axis=-1)
+        for w, b in zip(p["mlp_w"], p["mlp_b"]):
+            x = jax.nn.relu(x @ w + b)
+        parts.append(x @ p["mlp_h"])
+    return sum(parts)
+
+
+def bce_loss(p, cfg: NCFConfig, i, j, y):
+    z = logits(p, cfg, i, j)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def adam_step(p, m, v, t, cfg: NCFConfig, i, j, y, lr=1e-3, b1=0.9, b2=0.999):
+    g = jax.grad(bce_loss)(p, cfg, i, j, y)
+    m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+    v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+    mh = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
+    p = jax.tree.map(lambda a, mm, vv: a - lr * mm / (jnp.sqrt(vv) + 1e-8), p, mh, vh)
+    return p, m, v
+
+
+@partial(jax.jit, static_argnames=("cfg", "topk"))
+def hit_ratio(p, cfg: NCFConfig, users, pos_items, cand_items, topk=10):
+    """HR@K with the standard 1-positive + sampled-negatives protocol."""
+    def one(u, pos, cands):
+        items = jnp.concatenate([pos[None], cands])
+        z = logits(p, cfg, jnp.full_like(items, u), items)
+        rank = jnp.sum(z > z[0])
+        return (rank < topk).astype(jnp.float32)
+
+    return jnp.mean(jax.vmap(one)(users, pos_items, cand_items))

@@ -1,0 +1,110 @@
+"""Online learning for incremental data — paper Alg. 4.
+
+New rows Ī and new columns J̄ arrive with interactions ΔΩ (new rows may rate
+old *and* new columns).  The update:
+
+  1. fold ΔΩ into the cached pre-sign accumulators S_j (old cols re-sign;
+     new cols get fresh accumulators) — `simlsh.update_accumulators`;
+  2. re-bucket → Top-K for *new* columns over the whole set Ĵ (old columns
+     keep their neighbours, per the paper);
+  3. grow {U, b} by M̄ rows and {V, b̂, W, C} by N̄ cols;
+  4. train only the new parameters on ΔΩ — old parameters are *frozen*
+     (the paper's "remains unchanged"), implemented by masking the scatter
+     updates to ids ≥ the old sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import simlsh, topk
+from repro.core.model import Params, assemble
+from repro.core.sgd import Hyper, culsh_step, lr_decay
+from repro.data.sparse import SparseMatrix, epoch_batches, from_coo
+
+
+@dataclasses.dataclass
+class OnlineState:
+    params: Params
+    S: jax.Array          # [q, N, p·G] simLSH accumulators
+    JK: jax.Array         # [N, K]
+    sp: SparseMatrix      # all interactions seen so far
+    M: int
+    N: int
+
+
+def grow_params(p: Params, M_new: int, N_new: int, key) -> Params:
+    F = p.U.shape[1]
+    K = p.W.shape[1]
+    dM, dN = M_new - p.U.shape[0], N_new - p.V.shape[0]
+    ku, kv = jax.random.split(key)
+    s = 1.0 / jnp.sqrt(F)
+    return Params(
+        U=jnp.concatenate([p.U, s * jax.random.normal(ku, (dM, F))]),
+        V=jnp.concatenate([p.V, s * jax.random.normal(kv, (dN, F))]),
+        b=jnp.concatenate([p.b, jnp.zeros((dM,))]),
+        bh=jnp.concatenate([p.bh, jnp.zeros((dN,))]),
+        W=jnp.concatenate([p.W, jnp.zeros((dN, K))]),
+        C=jnp.concatenate([p.C, jnp.zeros((dN, K))]),
+        mu=p.mu,
+    )
+
+
+def masked_culsh_step(p: Params, bt, hp: Hyper, decay, M_old: int, N_old: int):
+    """Eq. (5) step that only moves parameters of *new* rows/cols."""
+    p2 = culsh_step(p, bt, hp, decay)
+    rm = (jnp.arange(p.U.shape[0]) >= M_old).astype(jnp.float32)
+    cm = (jnp.arange(p.V.shape[0]) >= N_old).astype(jnp.float32)
+    mix = lambda new, old, m: old + m * (new - old)
+    return Params(
+        U=mix(p2.U, p.U, rm[:, None]),
+        V=mix(p2.V, p.V, cm[:, None]),
+        b=mix(p2.b, p.b, rm),
+        bh=mix(p2.bh, p.bh, cm),
+        W=mix(p2.W, p.W, cm[:, None]),
+        C=mix(p2.C, p.C, cm[:, None]),
+        mu=p.mu,
+    )
+
+
+def online_update(st: OnlineState, new_rows, new_cols, new_vals,
+                  cfg: simlsh.SimLSHConfig, hp: Hyper, key, *,
+                  M_new: int, N_new: int, K: int, epochs: int = 3,
+                  batch: int = 4096) -> OnlineState:
+    """Alg. 4 end-to-end.  ``new_*`` are ΔΩ triples in the grown id space."""
+    k_hash, k_grow, k_topk, k_train = jax.random.split(key, 4)
+
+    # (1)(2) incremental hashing + re-sign — lines 1–6
+    S2, sigs = simlsh.update_accumulators(
+        st.S, new_rows, new_cols, new_vals, cfg, k_hash, N_new)
+
+    # merged interaction matrix (new triples appended)
+    sp_all = from_coo(
+        jnp.concatenate([st.sp.rows, jnp.asarray(new_rows, jnp.int32)]),
+        jnp.concatenate([st.sp.cols, jnp.asarray(new_cols, jnp.int32)]),
+        jnp.concatenate([st.sp.vals, jnp.asarray(new_vals, jnp.float32)]),
+        (M_new, N_new))
+
+    # (3) Top-K: old columns keep their lists; new columns search Ĵ — lines 7–9
+    JK_all = topk.topk_from_signatures(sigs, k_topk, K=K, band_cap=cfg.band_cap)
+    JK = jnp.concatenate([st.JK, JK_all[st.N:]], axis=0) if N_new > st.N else st.JK
+
+    # (4)(5) train only new params on ΔΩ — lines 10–15
+    p = grow_params(st.params, M_new, N_new, k_grow)
+    delta = from_coo(new_rows, new_cols, new_vals, (M_new, N_new))
+
+    for ep in range(epochs):
+        kk = jax.random.fold_in(k_train, ep)
+        idx, valid = epoch_batches(kk, delta.nnz, min(batch, delta.nnz))
+        decay = lr_decay(hp, jnp.asarray(ep))
+
+        def body(pp, ib):
+            bidx, bvalid = ib
+            bt = assemble(sp_all, JK, bidx, bvalid)
+            return masked_culsh_step(pp, bt, hp, decay, st.M, st.N), None
+
+        p, _ = jax.lax.scan(body, p, (idx, valid))
+
+    return OnlineState(params=p, S=S2, JK=JK, sp=sp_all, M=M_new, N=N_new)

@@ -1,0 +1,127 @@
+"""Stochastic optimization — paper Eq. (4)/(5) updates + Eq. (7) dynamic LR.
+
+Two engines, mirroring the paper's two contributions:
+
+* ``mf_step``        — CUSGD++ analogue: plain MF {U, V} only.
+* ``culsh_step``     — CULSH-MF: the full six-parameter fused update.
+
+TPU adaptation (DESIGN.md §2/§8.1): updates are applied to a *mini-batch*
+with scatter-add (`.at[].add`).  When the batch is conflict-free (each i and
+each j at most once — the invariant the paper's D×D blocking provides) this
+is *exactly* Eq. (5) applied in parallel; with collisions it is the summed
+batch-SGD step.  Both engines are pure functions scanned over an epoch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.model import Batch, Params, assemble, predict, predict_mf
+from repro.data.sparse import SparseMatrix, epoch_batches
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Hyper:
+    # initial learning rates (paper Table 3/5 names)
+    a_b: float = 0.02
+    a_bh: float = 0.02
+    a_u: float = 0.02
+    a_v: float = 0.02
+    a_w: float = 0.001
+    a_c: float = 0.001
+    # regularization
+    l_b: float = 0.01
+    l_bh: float = 0.01
+    l_u: float = 0.01
+    l_v: float = 0.01
+    l_w: float = 0.05
+    l_c: float = 0.05
+    # Eq. (7) decay
+    beta: float = 0.3
+
+
+def lr_decay(hp: Hyper, t: jax.Array) -> jax.Array:
+    """γ_t = α / (1 + β·t^1.5) — Eq. (7); returns the *decay factor*."""
+    return 1.0 / (1.0 + hp.beta * jnp.power(t.astype(jnp.float32), 1.5))
+
+
+def _collision_scales(p: Params, bt: Batch):
+    """1/count normalizers so rows hit k× in a batch get the *mean* update
+    (zipf heads would otherwise receive k summed steps and diverge).
+    Conflict-free batches have all counts = 1 → exact Eq. (5)."""
+    ci = jnp.zeros((p.U.shape[0],), jnp.float32).at[bt.i].add(bt.valid)
+    cj = jnp.zeros((p.V.shape[0],), jnp.float32).at[bt.j].add(bt.valid)
+    si = 1.0 / jnp.maximum(ci[bt.i], 1.0)
+    sj = 1.0 / jnp.maximum(cj[bt.j], 1.0)
+    return si, sj
+
+
+def _error(r, pred, bce: bool):
+    """e_ij: residual (L2) or r − σ(pred) (BCE — the paper's implicit-
+    feedback variant: "we change the loss function ... to cross entropy,
+    and the update formula will follow the corresponding change")."""
+    return r - (jax.nn.sigmoid(pred) if bce else pred)
+
+
+def mf_step(p: Params, bt: Batch, hp: Hyper, decay, bce: bool = False) -> Params:
+    """CUSGD++: u_i ← u_i + γ(e·v_j − λu·u_i);  v symmetric."""
+    e = _error(bt.r, predict_mf(p, bt), bce) * bt.valid
+    ui, vj = p.U[bt.i], p.V[bt.j]
+    si, sj = _collision_scales(p, bt)
+    gu = hp.a_u * decay
+    gv = hp.a_v * decay
+    vmask = bt.valid[:, None]
+    U = p.U.at[bt.i].add(gu * (e[:, None] * vj - hp.l_u * ui) * vmask
+                         * si[:, None])
+    V = p.V.at[bt.j].add(gv * (e[:, None] * ui - hp.l_v * vj) * vmask
+                         * sj[:, None])
+    return dataclasses.replace(p, U=U, V=V)
+
+
+def culsh_step(p: Params, bt: Batch, hp: Hyper, decay,
+               bce: bool = False) -> Params:
+    """CULSH-MF: the fused Eq. (5) update of {b, b̂, U, V, W, C}."""
+    pred, aux = predict(p, bt)
+    e = _error(bt.r, pred, bce) * bt.valid
+    vmask = bt.valid[:, None]
+    ui, vj = p.U[bt.i], p.V[bt.j]
+    si, sj = _collision_scales(p, bt)
+
+    d = decay
+    b = p.b.at[bt.i].add(hp.a_b * d * (e - hp.l_b * p.b[bt.i]) * bt.valid * si)
+    bh = p.bh.at[bt.j].add(hp.a_bh * d * (e - hp.l_bh * p.bh[bt.j])
+                           * bt.valid * sj)
+    U = p.U.at[bt.i].add(hp.a_u * d * (e[:, None] * vj - hp.l_u * ui) * vmask
+                         * si[:, None])
+    V = p.V.at[bt.j].add(hp.a_v * d * (e[:, None] * ui - hp.l_v * vj) * vmask
+                         * sj[:, None])
+    # w_{j,k} ← w + γw(|R|^{-1/2}·e·(r_nb − b̄_nb) − λw·w) on explicit slots
+    wj, cj = p.W[bt.j], p.C[bt.j]
+    dw = (aux["sR"][:, None] * e[:, None] * aux["resid"] - hp.l_w * wj) * bt.expl
+    dc = (aux["sN"][:, None] * e[:, None] - hp.l_c * cj) * bt.impl
+    W = p.W.at[bt.j].add(hp.a_w * d * dw * vmask * sj[:, None])
+    C = p.C.at[bt.j].add(hp.a_c * d * dc * vmask * sj[:, None])
+    return dataclasses.replace(p, b=b, bh=bh, U=U, V=V, W=W, C=C)
+
+
+@partial(jax.jit, static_argnames=("batch", "mf_only", "bce"))
+def train_epoch(p: Params, sp: SparseMatrix, JK: jax.Array, key: jax.Array,
+                epoch: jax.Array, hp: Hyper, *, batch: int = 4096,
+                mf_only: bool = False, bce: bool = False) -> Params:
+    """One epoch: shuffled mini-batches scanned with the fused step."""
+    idx, valid = epoch_batches(key, sp.nnz, batch)
+    decay = lr_decay(hp, epoch)
+
+    def body(pp, ib):
+        bidx, bvalid = ib
+        bt = assemble(sp, JK, bidx, bvalid)
+        pp = (mf_step(pp, bt, hp, decay, bce) if mf_only
+              else culsh_step(pp, bt, hp, decay, bce))
+        return pp, None
+
+    p, _ = jax.lax.scan(body, p, (idx, valid))
+    return p

@@ -1,0 +1,122 @@
+"""simLSH — the paper's C1 contribution (Eq. 3 + coarse/fine amplification).
+
+Encoding: for item (column) j,  H̄_j = Υ( Σ_{i∈Ω̂_j} Ψ(r_ij) · Φ(H_i) )
+where H_i is a random G-bit string per row i, Φ maps {0,1}→{−1,+1},
+Ψ is a rating-weighting (r^ψ, paper uses ψ∈{1,2,4}), and Υ = sign→bit.
+
+Amplification: a *coarse* group ANDs p independent hashes (concatenated into
+one p·G-bit signature → collision prob P₂ᵖ for dissimilar pairs), and q such
+groups are ORed *fine*-grained (collision prob 1−(1−P₁ᵖ)^q for similar pairs).
+
+TPU adaptation (DESIGN.md §2): the per-row random bits are generated
+*functionally* — Φ-row(i) = rademacher(fold_in(key, band, i)) — so any row id
+(including rows that arrive later, Alg. 4 online) maps to a fixed hash row
+without storing H.  Encoding is a rating-weighted segment-sum, the same
+computation the Pallas kernel `kernels/simlsh_encode` tiles into VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.sparse import SparseMatrix
+
+
+@dataclasses.dataclass(frozen=True)
+class SimLSHConfig:
+    G: int = 8          # bits per elementary hash
+    p: int = 3          # coarse-grained: hashes ANDed into one signature
+    q: int = 20         # fine-grained: signature bands ORed
+    psi_pow: float = 2.0  # Ψ(r) = r^psi_pow  (paper: ψ ∈ {1, 2, 4})
+    # "centered": Ψ(r) = sign(r−μ)·|r−μ|^ψ — beyond-paper variant; the paper
+    # only requires Ψ to put "a suitable interval between different r_ij"
+    # and the signed form extracts preference rather than popularity.
+    psi_mode: str = "pow"  # pow | centered
+    psi_center: float = 0.0
+    band_cap: int = 8   # max candidates contributed per band (sorted-bucket window)
+
+    @property
+    def sig_bits(self) -> int:
+        return self.G * self.p
+
+    def __post_init__(self):
+        # int32-safe packing (jax default x64-disabled); p·G ≤ 30
+        assert self.sig_bits <= 30, "signature must pack into int32 (p·G ≤ 30)"
+
+
+def psi(vals: jax.Array, psi_pow: float, psi_mode: str = "pow",
+        psi_center: float = 0.0) -> jax.Array:
+    if psi_mode == "centered":
+        d = vals - psi_center
+        return jnp.sign(d) * jnp.power(jnp.abs(d), psi_pow)
+    return jnp.power(vals, psi_pow)
+
+
+def phi_rows(key: jax.Array, band: jax.Array, ids: jax.Array, bits: int) -> jax.Array:
+    """±1 hash rows Φ(H_i) for arbitrary row ids (online-safe, stateless)."""
+    kb = jax.random.fold_in(key, band)
+
+    def one(i):
+        return jax.random.rademacher(jax.random.fold_in(kb, i), (bits,), jnp.float32)
+
+    return jax.vmap(one)(ids)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """[..., nbits] bool → int32 signature (nbits ≤ 30)."""
+    w = (2 ** jnp.arange(bits.shape[-1], dtype=jnp.int32))
+    return jnp.sum(bits.astype(jnp.int32) * w, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("N", "bits", "psi_pow", "psi_mode", "psi_center"))
+def band_accumulate(sp_rows, sp_cols, sp_vals, key, band, *, N, bits, psi_pow,
+                    psi_mode="pow", psi_center=0.0):
+    """Pre-sign accumulator S_j = Σ Ψ(r_ij) Φ(H_i) for one band.  [N, bits]."""
+    phi = phi_rows(key, band, sp_rows, bits)           # [nnz, bits]
+    contrib = psi(sp_vals, psi_pow, psi_mode, psi_center)[:, None] * phi
+    return jax.ops.segment_sum(contrib, sp_cols, num_segments=N)
+
+
+def encode(sp: SparseMatrix, cfg: SimLSHConfig, key: jax.Array,
+           return_accumulators: bool = False):
+    """All q band signatures.  Returns sigs [q, N] int64 (and accumulators
+
+    [q, N, p·G] float32 when requested — the Alg. 4 online cache)."""
+
+    def one_band(band):
+        S = band_accumulate(sp.rows, sp.cols, sp.vals, key, band,
+                            N=sp.N, bits=cfg.sig_bits, psi_pow=cfg.psi_pow,
+                            psi_mode=cfg.psi_mode, psi_center=cfg.psi_center)
+        return S
+
+    bands = jnp.arange(cfg.q)
+    S = jax.lax.map(one_band, bands)                   # [q, N, bits]
+    sigs = pack_bits(S >= 0)
+    if return_accumulators:
+        return sigs, S
+    return sigs
+
+
+def update_accumulators(S: jax.Array, new_rows, new_cols, new_vals,
+                        cfg: SimLSHConfig, key: jax.Array, N_total: int):
+    """Alg. 4 lines 1–6: fold ΔΩ into cached accumulators; re-sign.
+
+    ``S`` is [q, N_old, bits]; columns ≥ N_old are new items (appended).
+    Returns (S', sigs' [q, N_total]).
+    """
+    q, N_old, bits = S.shape
+    if N_total > N_old:
+        S = jnp.concatenate(
+            [S, jnp.zeros((q, N_total - N_old, bits), S.dtype)], axis=1)
+
+    def one_band(band_S, band):
+        dS = band_accumulate(new_rows, new_cols, new_vals, key, band,
+                             N=N_total, bits=bits, psi_pow=cfg.psi_pow,
+                             psi_mode=cfg.psi_mode, psi_center=cfg.psi_center)
+        return band_S + dS
+
+    S2 = jax.vmap(one_band)(S, jnp.arange(q))
+    return S2, pack_bits(S2 >= 0)

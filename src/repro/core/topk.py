@@ -1,0 +1,87 @@
+"""Top-K nearest-neighbour extraction from LSH band signatures.
+
+Replaces the paper's GPU hash-table probe (Alg. 1 lines 10–12) with a
+sort-based pipeline that is fixed-shape and TPU-friendly (DESIGN.md §2):
+
+  1. per band: argsort signatures; items adjacent in sort order with *equal*
+     signature are bucket-mates.  Each item takes up to `band_cap` mates
+     (window around its sorted position) — the bucket cap the paper's
+     fixed-size hash table also implies.
+  2. across bands: per item, sort the q·band_cap candidate ids; run-length
+     count equal ids ("K most frequent variables in the hash table"); take
+     the K highest counts; random-fill any deficit (paper: "make a random
+     supplement if the number is less than K").
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+@partial(jax.jit, static_argnames=("band_cap",))
+def band_candidates(sig: jax.Array, *, band_cap: int) -> jax.Array:
+    """One band's candidates.  sig [N] int64 → cand [N, band_cap] int32.
+
+    cand entries are item ids sharing this band's signature, SENTINEL-padded.
+    """
+    N = sig.shape[0]
+    order = jnp.argsort(sig)
+    ssig = sig[order]
+    half = band_cap // 2
+    offs = jnp.concatenate([jnp.arange(1, half + 1), -jnp.arange(1, band_cap - half + 1)])
+
+    def at_offset(off):
+        pos = jnp.arange(N) + off
+        ok = (pos >= 0) & (pos < N)
+        pos = jnp.clip(pos, 0, N - 1)
+        same = ok & (ssig[pos] == ssig)
+        return jnp.where(same, order[pos], SENTINEL)
+
+    cand_sorted = jax.vmap(at_offset, out_axes=1)(offs)      # [N, band_cap]
+    # scatter back to original item order
+    out = jnp.full((N, band_cap), SENTINEL, jnp.int32)
+    return out.at[order].set(cand_sorted.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("K",))
+def topk_frequent(cands: jax.Array, key: jax.Array, *, K: int) -> jax.Array:
+    """cands [N, L] (SENTINEL-padded) → Top-K most frequent per row [N, K].
+
+    Deficit rows are filled with random items ≠ self (and de-duplication of
+    the random fill against found neighbours is *not* attempted, matching the
+    paper's cheap "random supplement").
+    """
+    N, L = cands.shape
+    self_id = jnp.arange(N, dtype=jnp.int32)[:, None]
+    cands = jnp.where(cands == self_id, SENTINEL, cands)
+    c = jnp.sort(cands, axis=1)                               # [N, L]
+
+    def row_counts(row):
+        first = jnp.searchsorted(row, row, side="left")
+        last = jnp.searchsorted(row, row, side="right")
+        count = (last - first).astype(jnp.int32)
+        is_head = first == jnp.arange(L)
+        valid = row != SENTINEL
+        score = jnp.where(is_head & valid, count, -1)
+        return score
+
+    scores = jax.vmap(row_counts)(c)
+    top_scores, top_idx = jax.lax.top_k(scores, K)            # [N, K]
+    nbrs = jnp.take_along_axis(c, top_idx, axis=1)
+    found = top_scores > 0
+
+    rand = jax.random.randint(key, (N, K), 0, N, jnp.int32)
+    rand = jnp.where(rand == self_id, (rand + 1) % N, rand)
+    return jnp.where(found, nbrs, rand)
+
+
+def topk_from_signatures(sigs: jax.Array, key: jax.Array, *, K: int,
+                         band_cap: int) -> jax.Array:
+    """sigs [q, N] → J^K [N, K] int32 (the paper's Top-K matrix)."""
+    cands = jax.vmap(lambda s: band_candidates(s, band_cap=band_cap))(sigs)
+    cands = jnp.transpose(cands, (1, 0, 2)).reshape(sigs.shape[1], -1)
+    return topk_frequent(cands, key, K=K)

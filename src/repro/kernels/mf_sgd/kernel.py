@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused CUSGD++ step (paper Alg. 2, update rule Eq. 5).
+
+For a conflict-free batch tile (each i / j at most once — the invariant the
+paper's D×D blocking provides), one VMEM pass computes
+
+    e   = r − u·v
+    u' = u + γu (e·v − λu·u)
+    v' = v + γv (e·u − λv·v)
+
+using the *pre-update* u in the v update exactly like the register-resident
+CUDA kernel (both updates read the same stale operands).  This is the TPU
+image of "keep u_i in registers, fuse dot + update": tile-resident operands,
+one round trip to HBM per row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sgd_kernel(u_ref, v_ref, r_ref, valid_ref, hp_ref, u_out, v_out, e_out):
+    u = u_ref[...]                       # [TB, F]
+    v = v_ref[...]
+    r = r_ref[...]                       # [TB]
+    valid = valid_ref[...]
+    gu, gv, lu, lv = hp_ref[0], hp_ref[1], hp_ref[2], hp_ref[3]
+    e = (r - jnp.sum(u * v, axis=-1)) * valid
+    eb = e[:, None]
+    vm = valid[:, None]
+    u_out[...] = u + gu * (eb * v - lu * u) * vm
+    v_out[...] = v + gv * (eb * u - lv * v) * vm
+    e_out[...] = e
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def mf_sgd_step(u, v, r, valid, gamma_u, gamma_v, lam_u, lam_v, *,
+                tile_b: int = 256, interpret: bool = True):
+    """u,v [B,F]; r,valid [B] → (u', v', e).  Batch must be conflict-free."""
+    B, F = u.shape
+    pad = (-B) % tile_b
+    if pad:
+        u = jnp.pad(u, ((0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+        r = jnp.pad(r, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    Bp = u.shape[0]
+    hp = jnp.stack([gamma_u, gamma_v, lam_u, lam_v]).astype(jnp.float32)
+
+    mat = pl.BlockSpec((tile_b, F), lambda i: (i, 0))
+    vec = pl.BlockSpec((tile_b,), lambda i: (i,))
+    hp_spec = pl.BlockSpec((4,), lambda i: (0,))
+    u2, v2, e = pl.pallas_call(
+        _sgd_kernel,
+        grid=(Bp // tile_b,),
+        in_specs=[mat, mat, vec, vec, hp_spec],
+        out_specs=[mat, mat, vec],
+        out_shape=[jax.ShapeDtypeStruct((Bp, F), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, F), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp,), jnp.float32)],
+        interpret=interpret,
+    )(u, v, r, valid.astype(jnp.float32), hp)
+    return u2[:B], v2[:B], e[:B]

@@ -1,0 +1,22 @@
+"""jit'd wrapper: gather rows → fused kernel step → scatter rows back.
+
+The conflict-free batch guarantee makes the scatter race-free (each i/j
+appears once), matching MCULSH-MF's D×D-block invariant.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.model import Params
+from repro.kernels.mf_sgd.kernel import mf_sgd_step
+
+
+def apply_mf_sgd(p: Params, i, j, r, valid, hp, decay, *,
+                 interpret: bool = True) -> Params:
+    import dataclasses
+    u2, v2, _ = mf_sgd_step(
+        p.U[i], p.V[j], r, valid,
+        jnp.float32(hp.a_u) * decay, jnp.float32(hp.a_v) * decay,
+        jnp.float32(hp.l_u), jnp.float32(hp.l_v), interpret=interpret)
+    return dataclasses.replace(
+        p, U=p.U.at[i].set(u2), V=p.V.at[j].set(v2))

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused CUSGD++ step."""
+import jax.numpy as jnp
+
+
+def mf_sgd_step_ref(u, v, r, valid, gamma_u, gamma_v, lam_u, lam_v):
+    e = (r - jnp.sum(u * v, axis=-1)) * valid
+    eb = e[:, None]
+    vm = valid[:, None]
+    u2 = u + gamma_u * (eb * v - lam_u * u) * vm
+    v2 = v + gamma_v * (eb * u - lam_v * v) * vm
+    return u2, v2, e

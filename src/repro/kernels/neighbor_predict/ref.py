@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for neighbor_predict (Eq. 1 fused prediction)."""
+import jax.numpy as jnp
+
+
+def neighbor_predict_ref(u, v, w, c, resid, impl, bbar, sR, sN):
+    dot = jnp.sum(u * v, axis=-1)
+    expl = jnp.sum(resid * w, axis=-1)
+    imp = jnp.sum(impl * c, axis=-1)
+    return bbar + sR * expl + sN * imp + dot

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the simlsh_encode kernel."""
+import jax.numpy as jnp
+
+
+def simlsh_encode_ref(psi, phi):
+    """psi [N, deg], phi [N, deg, bits] → [N, bits] f32."""
+    return jnp.einsum("nd,ndb->nb", psi.astype(jnp.float32),
+                      phi.astype(jnp.float32))

@@ -1,0 +1,70 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON artifacts.
+
+  PYTHONPATH=src python -m repro.launch.report [--mesh 16x16] [--section roofline|dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+def load(mesh):
+    out = []
+    for f in sorted(glob.glob(f"reports/dryrun/{mesh}/*.json")):
+        out.append(json.load(open(f)))
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(mesh):
+    rows = ["| arch | shape | status | peak GiB/chip | compile s | "
+            "collectives in module |",
+            "|---|---|---|---:|---:|---|"]
+    for r in load(mesh):
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP "
+                        f"({r['skip_reason'][:40]}…) | | | |")
+            continue
+        coll = ", ".join(f"{k}:{fmt_bytes(v)}G"
+                         for k, v in sorted(r["collectives_in_module"].items())
+                         if v > 0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | OK | "
+            f"{r['device_bytes']['peak_gib']:.2f} | {r['compile_s']:.0f} | "
+            f"{coll} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh):
+    rows = ["| arch | shape | bound | t_comp ms | t_mem ms | t_coll ms | "
+            "useful | roofline-frac |",
+            "|---|---|---|---:|---:|---:|---:|---:|"]
+    for r in load(mesh):
+        if r.get("skipped") or "roofline" not in r:
+            continue
+        x = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {x['bound']} | "
+            f"{x['t_compute']*1e3:.1f} | {x['t_memory']*1e3:.1f} | "
+            f"{x['t_collective']*1e3:.1f} | {x['useful_ratio']:.2f} | "
+            f"{x['mfu_bound']:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--section", default="roofline")
+    a = ap.parse_args()
+    if a.section == "dryrun":
+        print(dryrun_table(a.mesh))
+    else:
+        print(roofline_table(a.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+Nothing here allocates: params come from `jax.eval_shape(init_params)`,
+batches/caches are explicit SDS trees.  VLM/audio frontends are stubs —
+`frontend_embeds` are precomputed patch/frame embeddings per the brief.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import lm, steps
+
+VLM_PATCHES = 2880          # anyres: 5 tiles × 576 patches
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_for(cfg: ArchConfig, shape: ShapeSpec):
+    """Train/prefill batch SDS tree."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        out = {
+            "frontend_embeds": sds((B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32),
+        }
+        if cfg.lsh_softmax:
+            out["cands"] = sds((cfg.lsh_candidates,), jnp.int32)
+        return out
+    if cfg.family == "vlm" or cfg.frontend == "embed_stub":
+        npatch = min(VLM_PATCHES, S // 2)    # scale the stub for tiny shapes
+        S_txt = S - npatch
+        return {
+            "frontend_embeds": sds((B, npatch, cfg.d_model), jnp.bfloat16),
+            "tokens": sds((B, S_txt), jnp.int32),
+            "labels": sds((B, S_txt), jnp.int32),
+        }
+    out = {"tokens": sds((B, S), jnp.int32),
+           "labels": sds((B, S), jnp.int32)}
+    if cfg.lsh_softmax:
+        out["cands"] = sds((cfg.lsh_candidates,), jnp.int32)
+    return out
+
+
+def prefill_specs_for(cfg: ArchConfig, shape: ShapeSpec):
+    b = batch_specs_for(cfg, shape)
+    b.pop("labels", None)
+    return b
+
+
+def decode_specs_for(cfg: ArchConfig, shape: ShapeSpec):
+    """(cache SDS, tokens SDS) — one new token against a seq_len cache."""
+    B, T = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(partial(steps.init_cache, cfg, B, T))
+    tokens = sds((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    if shape.kind == "train":
+        return {"batch": batch_specs_for(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_specs_for(cfg, shape)}
+    cache, tokens = decode_specs_for(cfg, shape)
+    return {"cache": cache, "tokens": tokens}

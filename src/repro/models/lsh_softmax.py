@@ -1,0 +1,74 @@
+"""simLSH candidate selection for the LM softmax (the paper's technique
+applied to the vocabulary — DESIGN.md §4).
+
+The output-embedding table E [V, D] is the "item" side of an MF: simLSH
+hashes its rows exactly like LSH-MF hashes item columns (random ±1
+projections + sign, p·G-bit signatures, q bands).  A training step's
+candidate set is the union of the label tokens' bucket-mates (the tokens
+most confusable with the targets — the ones whose logits matter for the
+normalizer) padded with frequency-sampled negatives.
+
+Signatures refresh every `refresh_every` steps (embeddings drift slowly —
+the same amortization the paper uses for its hash tables; the online
+accumulator trick in core/simlsh makes the refresh incremental where only
+a few rows changed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk
+from repro.core.simlsh import SimLSHConfig, pack_bits
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LSHSoftmaxState:
+    sigs: jax.Array       # [q, V] band signatures of embedding rows
+    nbrs: jax.Array       # [V, K] bucket-mates per token
+    step: jax.Array       # refresh bookkeeping
+
+
+def hash_embeddings(E: jax.Array, cfg: SimLSHConfig, key) -> jax.Array:
+    """Dense-row simLSH: sig[b, v] = pack(sign(E[v] @ Phi_b)).  [q, V]."""
+    V, D = E.shape
+
+    def one_band(band):
+        kb = jax.random.fold_in(key, band)
+        phi = jax.random.rademacher(kb, (D, cfg.sig_bits), jnp.float32)
+        S = E.astype(jnp.float32) @ phi
+        return pack_bits(S >= 0)
+
+    return jax.lax.map(one_band, jnp.arange(cfg.q))
+
+
+@partial(jax.jit, static_argnames=("K", "band_cap"))
+def refresh(E, key, *, K: int = 8, band_cap: int = 8,
+            q: int = 8, G: int = 8, p: int = 2) -> LSHSoftmaxState:
+    cfg = SimLSHConfig(G=G, p=p, q=q, band_cap=band_cap)
+    sigs = hash_embeddings(E, cfg, key)
+    nbrs = topk.topk_from_signatures(sigs, key, K=K, band_cap=band_cap)
+    return LSHSoftmaxState(sigs=sigs, nbrs=nbrs, step=jnp.zeros((), jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("n_cands",))
+def candidates_for(state: LSHSoftmaxState, labels: jax.Array, key,
+                   *, n_cands: int) -> jax.Array:
+    """Union of the labels' bucket-mates, padded with random negatives.
+
+    labels [B, S] → cands [n_cands] (shared across the batch — one gather
+    of E rows per step, the same shape the dry-run lowers)."""
+    V = state.nbrs.shape[0]
+    lab = labels.reshape(-1)
+    mates = state.nbrs[lab].reshape(-1)                 # [B·S·K]
+    # dedupe-ish: sort then pick a strided sample to n_cands (cheap union)
+    mates = jnp.sort(mates)
+    take = min(n_cands // 2, mates.shape[0])
+    idx = jnp.linspace(0, mates.shape[0] - 1, take).astype(jnp.int32)
+    picked = mates[idx]
+    rand = jax.random.randint(key, (n_cands - take,), 0, V, jnp.int32)
+    return jnp.concatenate([picked, rand])

@@ -1,0 +1,164 @@
+"""Sharding rules: param/optimizer/batch/cache PartitionSpecs per arch.
+
+Mesh contract (launch/mesh.py): axes ``("pod","data","model")`` multi-pod or
+``("data","model")`` single-pod.  DP/FSDP over ("pod","data") = ``dp``; TP/EP
+over "model" = ``tp``.
+
+Rules (DESIGN.md §5):
+  * TP on the natural contraction/output axis (heads, ff, experts, vocab);
+  * kv projections: head-sharded when n_kv divides |tp|, else input-sharded
+    (contraction all-reduce of a small [B,S,kv,hd] tensor);
+  * FSDP (cfg.fsdp): additionally shard the *other* large axis over dp —
+    ZeRO-3 semantics, XLA all-gathers at use;
+  * optimizer moments follow param specs exactly;
+  * KV caches: batch over dp, sequence over tp (sequence-parallel decode:
+    softmax/contraction all-reduces [B,H] statistics only);
+  * batch dim never sharded when smaller than |dp| (long_500k B=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def mesh_axes(mesh):
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    return {"dp": dp if len(dp) > 1 else dp[0], "tp": "model",
+            "ndp": int(jnp.prod(jnp.array([mesh.shape[n] for n in dp]))),
+            "ntp": mesh.shape["model"]}
+
+
+def _fs(cfg, axes):
+    """fsdp shard axis (or None)."""
+    return axes["dp"] if cfg.fsdp else None
+
+
+def param_specs(cfg: ArchConfig, params, axes):
+    """PartitionSpec pytree matching `params` (works on SDS trees too)."""
+    tp = axes["tp"]
+    fs = _fs(cfg, axes)
+    ntp = axes["ntp"]
+    kv_on_heads = cfg.n_kv and cfg.n_kv % ntp == 0
+    q_on_heads = cfg.n_heads and cfg.n_heads_padded % ntp == 0
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        stacked = any(getattr(k, "key", None) in ("layers", "enc", "dec", "dec_cross")
+                      for k in path[:-1])
+        lead = (None,) if stacked else ()
+
+        def sp(*rest):
+            return P(*lead, *rest)
+
+        if name in ("embed", "out_embed"):
+            # never FSDP-shard the table: a D-sharded table forces a full
+            # de-shard all-gather at the logits einsum (measured 8 GiB)
+            return P(tp, None)
+        if name in ("final_norm", "enc_norm"):
+            return P(None)
+        # --- dense attention ---
+        if name == "wq":
+            # heads not divisible by |tp| (arctic: 56): sequence-sharded
+            # attention instead — weights fall back to FSDP-on-D
+            return sp(fs, tp, None) if q_on_heads else sp(fs, None, None)
+        if name in ("wk", "wv"):
+            # kv heads < |tp|: keep heads unsharded (small matrices), FSDP
+            # the D dim — sharding D on tp causes SPMD involuntary remat
+            return sp(None, tp, None) if kv_on_heads else sp(fs, None, None)
+        if name == "wo":
+            return sp(tp, None, fs) if q_on_heads else sp(None, None, fs)
+        if name in ("bq",):
+            return sp(tp, None) if q_on_heads else sp(None, None)
+        if name in ("bk", "bv"):
+            return sp(tp, None) if kv_on_heads else sp(None, None)
+        # --- mlp / moe ---
+        if name == "router":
+            return sp(None, None)
+        if name in ("w1", "w3"):
+            if leaf.ndim - len(lead) == 3:    # [E, D, ff] expert weights
+                return sp(axes["dp"], None, None) if cfg.moe_ep2d \
+                    else sp(tp, fs, None)
+            return sp(fs, tp)
+        if name == "w2":
+            if leaf.ndim - len(lead) == 3:
+                return sp(axes["dp"], None, None) if cfg.moe_ep2d \
+                    else sp(tp, None, fs)
+            return sp(tp, fs)
+        if name in ("w1d", "w3d"):
+            return sp(fs, tp)
+        if name == "w2d":
+            return sp(tp, fs)
+        # --- ssm ---
+        if name in ("z_proj", "x_proj", "dt_proj"):
+            return sp(fs, tp)
+        if name in ("b_proj", "c_proj"):
+            return sp(fs, None)
+        if name == "conv_x":
+            return sp(None, tp)
+        if name in ("conv_b", "conv_c"):
+            return sp(None, None)
+        if name in ("dt_bias", "A_log", "D"):
+            return sp(tp)
+        if name == "norm_w":
+            return sp(tp)
+        if name == "out_proj":
+            return sp(tp, fs)
+        # norms, scalars, anything 1D
+        return sp(*([None] * (leaf.ndim - len(lead))))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_specs(cfg: ArchConfig, batch, axes):
+    dp = axes["dp"]
+    ndp = axes["ndp"]
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        b_ax = dp if leaf.shape and leaf.shape[0] % ndp == 0 and leaf.shape[0] >= ndp else None
+        if name in ("tokens", "labels", "mask"):
+            return P(b_ax, None)
+        if name == "frontend_embeds":
+            return P(b_ax, None, None)
+        if name == "cands":
+            return P(None)
+        return P(*([b_ax] + [None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def cache_specs(cfg: ArchConfig, cache, axes):
+    dp, tp, ndp, ntp = axes["dp"], axes["tp"], axes["ndp"], axes["ntp"]
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if leaf.ndim == 0:
+            return P()
+        if name in ("k", "v", "cross_k", "cross_v"):        # [L,B,T,Hkv,hd]
+            b_ax = dp if leaf.shape[1] % ndp == 0 and leaf.shape[1] >= ndp else None
+            kv_ax = tp if leaf.shape[3] % ntp == 0 else None
+            t_ax = tp if kv_ax is None and leaf.shape[2] % ntp == 0 else None
+            return P(None, b_ax, t_ax, kv_ax, None)
+        if name == "ssm":                                    # [L,B,H,P,N]
+            b_ax = dp if leaf.shape[1] % ndp == 0 and leaf.shape[1] >= ndp else None
+            h_ax = tp if leaf.shape[2] % ntp == 0 else None
+            return P(None, b_ax, h_ax, None, None)
+        if name.startswith("conv"):                          # [L,B,K-1,C]
+            b_ax = dp if leaf.shape[1] % ndp == 0 and leaf.shape[1] >= ndp else None
+            c_ax = tp if leaf.shape[3] % ntp == 0 else None
+            return P(None, b_ax, None, c_ax)
+        if name == "enc_out":                                # [B,S,D]
+            b_ax = dp if leaf.shape[0] % ndp == 0 and leaf.shape[0] >= ndp else None
+            return P(b_ax, tp, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,159 @@
+"""Mamba2 — SSD (state-space duality) block, chunked scan formulation.
+
+Faithful to Dao & Gu 2024 (arXiv:2405.21060) §6: within chunks of length Q
+the recurrence is computed as a masked attention-like quadratic form; across
+chunks a [H, P, N] state is carried by a (short) sequential scan.  This is
+the TPU-friendly formulation: all heavy math is MXU einsums, the serial
+dimension is S/Q.
+
+Decode is the O(1) recurrence: S ← S·exp(dt·A) + dt·(B ⊗ x);  y = C·S + D·x.
+That constant-size state is why the ssm/hybrid archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_heads(cfg: ArchConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_headdim
+
+
+def _conv1d(x, w, state=None):
+    """Depthwise causal conv. x [B,S,C], w [K,C]. state [B,K-1,C] for decode."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return out, new_state
+
+
+def ssd_chunked(xs, dt, A, B, C, D, chunk: int):
+    """SSD over a sequence.
+
+    xs [B,S,H,P], dt [B,S,H] (post-softplus), A [H] (negative), B/C [B,S,N]
+    (single group, broadcast over heads), D [H].  Returns y [B,S,H,P].
+    """
+    b, S, H, Pd = xs.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    assert nc * Q == S, "seq must divide the ssd chunk"
+    f32 = jnp.float32
+
+    xs_c = xs.reshape(b, nc, Q, H, Pd)
+    dt_c = dt.reshape(b, nc, Q, H).astype(f32)
+    B_c = B.reshape(b, nc, Q, N).astype(f32)
+    C_c = C.reshape(b, nc, Q, N).astype(f32)
+
+    dA = dt_c * A.astype(f32)[None, None, None, :]           # [b,nc,Q,H] (≤0)
+    cum = jnp.cumsum(dA, axis=2)                             # within-chunk
+    seg_end = jnp.exp(cum[:, :, -1:, :] - cum)               # decay t→chunk end
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # whole-chunk decay
+
+    # ---- intra-chunk (quadratic, masked) --------------------------------
+    # L[s,t] = exp(cum_s − cum_t) for s ≥ t
+    Ldec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [b,nc,Q,Q,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Ldec = jnp.where(mask[None, None, :, :, None], Ldec, 0.0)
+    scores = jnp.einsum("bcsn,bctn->bcst", C_c, B_c)         # [b,nc,Q,Q]
+    G = scores[..., None] * Ldec * dt_c[:, :, None, :, :]    # [b,nc,s,t,H]
+    y_intra = jnp.einsum("bcsth,bcthp->bcshp", G, xs_c.astype(f32))
+
+    # ---- chunk states + inter-chunk scan --------------------------------
+    # state contribution of chunk c: Σ_t seg_end[t]·dt_t·(B_t ⊗ x_t)
+    Sc = jnp.einsum("bcth,bctn,bcthp->bchpn",
+                    seg_end * dt_c, B_c, xs_c.astype(f32))   # [b,nc,H,P,N]
+
+    def scan_fn(carry, inp):
+        Sc_c, decay_c = inp                                  # [b,H,P,N], [b,H]
+        prev = carry
+        new = prev * decay_c[:, :, None, None] + Sc_c
+        return new, prev
+
+    init = jnp.zeros((b, H, Pd, N), f32)
+    _, S_prev = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                      # [b,nc,H,P,N]
+
+    # y_inter[s] = exp(cum_s) · C_s · S_prev
+    in_decay = jnp.exp(cum)                                  # [b,nc,Q,H]
+    y_inter = jnp.einsum("bcsn,bchpn,bcsh->bcshp", C_c, S_prev, in_decay)
+
+    y = (y_intra + y_inter).reshape(b, S, H, Pd)
+    y = y + xs.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(xs.dtype)
+
+
+def ssd_decode(x1, dt1, A, B1, C1, D, state):
+    """One-token recurrence.  x1 [B,H,P], dt1 [B,H], B1/C1 [B,N],
+    state [B,H,P,N] (f32).  Returns (y [B,H,P], state')."""
+    f32 = jnp.float32
+    dA = jnp.exp(dt1.astype(f32) * A.astype(f32)[None, :])    # [B,H]
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt1.astype(f32), B1.astype(f32),
+                     x1.astype(f32))
+    state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C1.astype(f32), state)
+    y = y + x1.astype(f32) * D.astype(f32)[None, :, None]
+    return y.astype(x1.dtype), state
+
+
+def mamba_block(p, x, cfg: ArchConfig, *, chunk: int = 256, state=None,
+                conv_state=None):
+    """Full Mamba2 block.  Train/prefill: state=None, returns (y, None).
+    Decode: x [B,1,D] with (state, conv_state) carried.
+
+    The fused mamba2 in_proj is split into per-output projections (z, x, B,
+    C, dt) — column-block identical to the fused matmul, but each output
+    gets a clean TP sharding (z/x/dt head-sharded, B/C replicated).  The
+    depthwise conv splits the same way exactly.
+    """
+    di, N, H = d_inner(cfg), cfg.ssm_state, n_heads(cfg)
+    w = lambda name: p[name].astype(x.dtype)
+    z = jnp.einsum("bsd,de->bse", x, w("z_proj"))
+    xs = jnp.einsum("bsd,de->bse", x, w("x_proj"))
+    B_ = jnp.einsum("bsd,dn->bsn", x, w("b_proj"))
+    C_ = jnp.einsum("bsd,dn->bsn", x, w("c_proj"))
+    dt = jnp.einsum("bsd,dh->bsh", x, w("dt_proj"))
+
+    cs = conv_state if conv_state is not None else (None, None, None)
+    xs, ncx = _conv1d(xs, p["conv_x"], cs[0])
+    B_, ncb = _conv1d(B_, p["conv_b"], cs[1])
+    C_, ncc = _conv1d(C_, p["conv_c"], cs[2])
+    new_conv = (ncx, ncb, ncc)
+    silu = lambda t: jax.nn.silu(t.astype(jnp.float32)).astype(x.dtype)
+    xs, B_, C_ = silu(xs), silu(B_), silu(C_)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    bsz, S, _ = x.shape
+    xs_h = xs.reshape(bsz, S, H, cfg.ssm_headdim)
+    if state is None:
+        y = ssd_chunked(xs_h, dt, A, B_, C_, p["D"], chunk)
+        new_state = None
+    else:
+        y1, new_state = ssd_decode(xs_h[:, 0], dt[:, 0], A, B_[:, 0],
+                                   C_[:, 0], p["D"], state)
+        y = y1[:, None]
+
+    y = y.reshape(bsz, S, di)
+    # gated RMSNorm (mamba2's norm-then-gate)
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yn = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = (yn * p["norm_w"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, (new_state, new_conv)

@@ -1,0 +1,386 @@
+"""train_step / prefill / decode builders + Adam — what dryrun/train lower.
+
+All steps are pure functions over (params, opt/caches, batch); builders
+close over (cfg, mesh, mesh_axes) and return functions suitable for
+``jax.jit(..., in_shardings=..., out_shardings=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import lm
+from repro.models import moe as MOE
+from repro.models import sharding as SH
+from repro.models import ssm as SSM
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ArchConfig, p, batch, mesh=None, mesh_axes=None):
+    h = lm.forward(cfg, p, batch, mesh, mesh_axes)          # [B, S_all, D]
+    S_txt = batch["labels"].shape[1]
+    if h.shape[1] != S_txt:                                  # frontend prefix
+        h = h[:, h.shape[1] - S_txt:]
+    E = lm.out_embedding(p, cfg)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones(labels.shape, jnp.float32))
+
+    if cfg.lsh_softmax and "cands" in batch:
+        # paper-technique softmax: loss over {label} ∪ simLSH candidates
+        Ec = E[batch["cands"]].astype(cfg.dtype)             # [C, D]
+        logits_c = jnp.einsum("bsd,cd->bsc", h, Ec,
+                              preferred_element_type=jnp.float32)
+        e_lab = E[labels].astype(cfg.dtype)                  # [B, S, D]
+        logit_lab = jnp.einsum("bsd,bsd->bs", h, e_lab,
+                               preferred_element_type=jnp.float32)
+        # exclude accidental label hits among candidates
+        hit = (batch["cands"][None, None, :] == labels[..., None])
+        logits_c = jnp.where(hit, -1e30, logits_c)
+        lse = jnp.logaddexp(jax.nn.logsumexp(logits_c, -1), logit_lab)
+        nll = lse - logit_lab
+    else:
+        logits = lm.shard_vocab(
+            jnp.einsum("bsd,vd->bsv", h, E.astype(cfg.dtype),
+                       preferred_element_type=jnp.float32), mesh_axes)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # label logit via masked reduction — vocab stays sharded (no gather)
+        V = logits.shape[-1]
+        oh = lm.shard_vocab(jax.nn.one_hot(labels, V, dtype=logits.dtype),
+                            mesh_axes)
+        logit_lab = jnp.sum(logits * oh, axis=-1)
+        nll = lse - logit_lab
+
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Adam (moments in cfg.moment_dtype — bf16 = optimizer-state compression)
+# --------------------------------------------------------------------------
+
+
+def init_opt(cfg: ArchConfig, params):
+    md = cfg.moment_dtype
+    zeros = lambda x: jnp.zeros(x.shape, md)
+    return dict(m=jax.tree.map(zeros, params),
+                v=jax.tree.map(zeros, params),
+                count=jnp.zeros((), jnp.int32))
+
+
+def adam_update(cfg: ArchConfig, params, grads, opt, *, lr=3e-4, b1=0.9,
+                b2=0.95, eps=1e-8, wd=0.0, clip=1.0):
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-12))
+    count = opt["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p_, g_, m_, v_):
+        g32 = g_.astype(jnp.float32) * scale
+        m32 = b1 * m_.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v_.astype(jnp.float32) + (1 - b2) * g32 * g32
+        step = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps)
+        p32 = p_.astype(jnp.float32) * (1 - lr * wd) - lr * step
+        return (p32.astype(p_.dtype), m32.astype(m_.dtype),
+                v32.astype(v_.dtype))
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    params2 = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m2 = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v2 = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return params2, dict(m=m2, v=v2, count=count), gnorm
+
+
+# --------------------------------------------------------------------------
+# train step (microbatched gradient accumulation)
+# --------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, mesh=None, mesh_axes=None, lr=3e-4):
+    nmicro = max(1, cfg.microbatches)
+
+    def loss_fn(params, mb):
+        return lm_loss(cfg, params, mb, mesh, mesh_axes)
+
+    def pin_grads(params, g):
+        if mesh_axes is None:
+            return g
+        specs = SH.param_specs(cfg, params, mesh_axes)
+        return jax.tree.map(jax.lax.with_sharding_constraint, g, specs)
+
+    def train_step(params, opt, batch):
+        if nmicro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = pin_grads(params, grads)
+        else:
+            # straggler mitigation (bounded staleness): "mb_mask" [µ] zeroes
+            # late microbatches; gradients renormalize over the survivors
+            batch = dict(batch)
+            mb_mask = batch.pop("mb_mask", None)
+            if mb_mask is None:
+                mb_mask = jnp.ones((nmicro,), jnp.float32)
+
+            def split(x):
+                return x.reshape(nmicro, x.shape[0] // nmicro, *x.shape[1:])
+
+            mbs = {k: split(v) for k, v in batch.items()
+                   if v.ndim > 0 and v.shape[0] >= nmicro
+                   and v.shape[0] % nmicro == 0}
+            rest = {k: v for k, v in batch.items() if k not in mbs}
+            gd = cfg.grad_dtype
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, gd), params)
+
+            def body(carry, inp):
+                mb, w = inp
+                g_acc, l_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb | rest)
+                g = pin_grads(params, g)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + (w * b).astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + w * loss), None
+
+            (grads, loss), _ = jax.lax.scan(body, (zeros, 0.0),
+                                            (mbs, mb_mask))
+            denom = jnp.maximum(jnp.sum(mb_mask), 1.0)
+            grads = jax.tree.map(lambda g: g / denom, grads)
+            loss = loss / denom
+        params, opt, gnorm = adam_update(cfg, params, grads, opt, lr=lr)
+        return params, opt, dict(loss=loss, gnorm=gnorm)
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode with caches
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, B: int, T: int, dtype=jnp.bfloat16):
+    """Empty caches sized for total context T (what decode cells lower)."""
+    fam = cfg.family
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if fam in ("dense", "moe", "vlm"):
+        hd = cfg.hd
+        cache["k"] = jnp.zeros((cfg.L, B, T, cfg.n_kv, hd), dtype)
+        cache["v"] = jnp.zeros((cfg.L, B, T, cfg.n_kv, hd), dtype)
+    elif fam in ("ssm", "hybrid"):
+        H, Pd, N = SSM.n_heads(cfg), cfg.ssm_headdim, cfg.ssm_state
+        K, di = cfg.ssm_conv, SSM.d_inner(cfg)
+        cache["ssm"] = jnp.zeros((cfg.L, B, H, Pd, N), jnp.float32)
+        cache["conv_x"] = jnp.zeros((cfg.L, B, K - 1, di), dtype)
+        cache["conv_b"] = jnp.zeros((cfg.L, B, K - 1, N), dtype)
+        cache["conv_c"] = jnp.zeros((cfg.L, B, K - 1, N), dtype)
+        if fam == "hybrid":
+            napp = len(lm._hybrid_groups(cfg))
+            Tw = min(T, _hybrid_window(cfg, T) or T)
+            hd = cfg.hd
+            cache["k"] = jnp.zeros((napp, B, Tw, cfg.n_kv, hd), dtype)
+            cache["v"] = jnp.zeros((napp, B, Tw, cfg.n_kv, hd), dtype)
+    elif fam == "encdec":
+        hd = cfg.hd
+        cache["k"] = jnp.zeros((cfg.L, B, T, cfg.n_kv, hd), dtype)
+        cache["v"] = jnp.zeros((cfg.L, B, T, cfg.n_kv, hd), dtype)
+        cache["cross_k"] = jnp.zeros((cfg.L, B, T, cfg.n_kv, hd), dtype)
+        cache["cross_v"] = jnp.zeros((cfg.L, B, T, cfg.n_kv, hd), dtype)
+    return cache
+
+
+def _hybrid_window(cfg: ArchConfig, T: int):
+    """Windowed attention for the shared blocks at extreme context
+    (long_500k) — the documented sub-quadratic adaptation."""
+    return 8192 if T >= 100_000 else 0
+
+
+
+def _scan_or_unroll(body, carry, xs, unroll: bool):
+    """scan unless `unroll` (exact cost_analysis; see lm._scan_layers)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    stack = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return carry, stack
+
+
+def make_decode_step(cfg: ArchConfig, mesh=None, mesh_axes=None):
+    fam = cfg.family
+
+    def logits_of(p, h):
+        E = lm.out_embedding(p, cfg)
+        return lm.shard_vocab(
+            jnp.einsum("bsd,vd->bsv", h, E.astype(cfg.dtype),
+                       preferred_element_type=jnp.float32), mesh_axes)
+
+    def decode_dense(params, cache, tokens):
+        x = lm.embed_tokens(params, cfg, tokens, mesh_axes)             # [B,1,D]
+        pos = cache["pos"]
+
+        def body(carry, xs):
+            h = carry
+            pl, ck, cv = xs
+            h, info = lm._attn_sublayer(
+                pl, h, cfg, causal=True, q_offset=pos,
+                kv_cache=(ck, cv), cache_pos=pos)
+            h = lm._ffn_sublayer(pl, h, cfg, mesh, mesh_axes, shard_seq=False)
+            return h, info["cache"]
+
+        h, (k2, v2) = _scan_or_unroll(
+            body, x, (params["layers"], cache["k"], cache["v"]),
+            cfg.unroll_layers)
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        cache2 = cache | {"k": k2, "v": v2, "pos": pos + 1}
+        return logits_of(params, h), cache2
+
+    def decode_ssm_layer(pl, h, cfg, st, cx, cb, cc):
+        xn = L.rms_norm(h, pl["ln"], cfg.norm_eps)
+        y, (new_state, new_conv) = SSM.mamba_block(
+            pl, xn, cfg, state=st, conv_state=(cx, cb, cc))
+        return h + y, (new_state, *new_conv)
+
+    def decode_ssm(params, cache, tokens):
+        x = lm.embed_tokens(params, cfg, tokens, mesh_axes)
+
+        def body(carry, xs):
+            h = carry
+            pl, st, cx, cb, cc = xs
+            h, new = decode_ssm_layer(pl, h, cfg, st, cx, cb, cc)
+            return h, new
+
+        h, (st2, cx2, cb2, cc2) = _scan_or_unroll(
+            body, x, (params["layers"], cache["ssm"], cache["conv_x"],
+                      cache["conv_b"], cache["conv_c"]), cfg.unroll_layers)
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        cache2 = cache | {"ssm": st2, "conv_x": cx2, "conv_b": cb2,
+                          "conv_c": cc2, "pos": cache["pos"] + 1}
+        return logits_of(params, h), cache2
+
+    def decode_hybrid(params, cache, tokens):
+        x = lm.embed_tokens(params, cfg, tokens, mesh_axes)
+        pos = cache["pos"]
+        Tw = cache["k"].shape[2]
+        win = _hybrid_window(cfg, Tw) or 0
+        groups = lm._hybrid_groups(cfg)
+        h = x
+        new_k, new_v = [], []
+        new_ssm = [None] * cfg.L
+        new_cx, new_cb, new_cc = ([None] * cfg.L for _ in range(3))
+        for gi, (start, size) in enumerate(groups):
+            # shared attention block with ring-buffer window cache
+            wpos = jnp.mod(pos, Tw)
+            h, info = lm._attn_sublayer(
+                params["shared_attn"], h, cfg, causal=True, q_offset=pos,
+                kv_cache=(cache["k"][gi], cache["v"][gi]), cache_pos=wpos)
+            kv = info["cache"]
+            h = lm._ffn_sublayer(params["shared_attn"], h, cfg, mesh,
+                                 mesh_axes, shard_seq=False)
+            new_k.append(kv[0])
+            new_v.append(kv[1])
+            for li in range(start, start + size):
+                pl = jax.tree.map(lambda a: a[li], params["layers"])
+                h, new = decode_ssm_layer(
+                    pl, h, cfg, cache["ssm"][li], cache["conv_x"][li],
+                    cache["conv_b"][li], cache["conv_c"][li])
+                new_ssm[li], new_cx[li], new_cb[li], new_cc[li] = new
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        cache2 = cache | {
+            "k": jnp.stack(new_k), "v": jnp.stack(new_v),
+            "ssm": jnp.stack(new_ssm), "conv_x": jnp.stack(new_cx),
+            "conv_b": jnp.stack(new_cb), "conv_c": jnp.stack(new_cc),
+            "pos": pos + 1}
+        return logits_of(params, h), cache2
+
+    def decode_encdec(params, cache, tokens):
+        x = lm.embed_tokens(params, cfg, tokens, mesh_axes)
+        pos = cache["pos"]
+
+        def body(carry, xs):
+            h = carry
+            pl, plx, ck, cv, xk, xv = xs
+            h, info = lm._attn_sublayer(
+                pl, h, cfg, causal=True, q_offset=pos,
+                kv_cache=(ck, cv), cache_pos=pos)
+            new_kv = info["cache"]
+            # cross-attention against precomputed encoder KV
+            xn = L.rms_norm(h, plx["ln1"], cfg.norm_eps)
+            q, _, _ = L.qkv_proj(plx, xn, cfg)
+            o = L.attention(q, xk.astype(h.dtype), xv.astype(h.dtype),
+                            q_offset=0, causal=False,
+                            query_chunk=cfg.query_chunk)
+            h = h + L.attn_out(plx, o, h.dtype)
+            h = lm._ffn_sublayer(pl, h, cfg, mesh, mesh_axes, shard_seq=False)
+            return h, new_kv
+
+        h, (k2, v2) = _scan_or_unroll(
+            body, x, (params["dec"], params["dec_cross"], cache["k"],
+                      cache["v"], cache["cross_k"], cache["cross_v"]),
+            cfg.unroll_layers)
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        cache2 = cache | {"k": k2, "v": v2, "pos": pos + 1}
+        return logits_of(params, h), cache2
+
+    return {"dense": decode_dense, "moe": decode_dense, "vlm": decode_dense,
+            "ssm": decode_ssm, "hybrid": decode_hybrid,
+            "encdec": decode_encdec}[fam]
+
+
+def make_prefill(cfg: ArchConfig, mesh=None, mesh_axes=None):
+    """Forward over the prompt; returns (last-token logits, filled cache).
+
+    For the prefill_32k dry-run cell the interesting artifact is the full
+    forward at S=32k with cache writes; decode cells consume init_cache-
+    shaped inputs directly.
+    """
+    fam = cfg.family
+
+    def prefill_dense(params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = lm.embed_tokens(params, cfg, tokens, mesh_axes)
+        if "frontend_embeds" in batch:
+            fe = batch["frontend_embeds"].astype(cfg.dtype)
+            x = jnp.concatenate([fe, x], axis=1)
+        T = x.shape[1]
+
+        def body(carry, pl):
+            h = carry
+            h, info = lm._attn_sublayer(pl, h, cfg, causal=True)
+            k, v = info["kv"]
+            h = lm._ffn_sublayer(pl, h, cfg, mesh, mesh_axes)
+            h = L.shard_acts(h, cfg, mesh_axes) if mesh_axes else h
+            return h, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+        h, (ks, vs) = _scan_or_unroll(body, x, params["layers"],
+                                      cfg.unroll_layers)
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        E = lm.out_embedding(params, cfg)
+        logits = jnp.einsum("bd,vd->bv", h[:, -1], E.astype(cfg.dtype),
+                            preferred_element_type=jnp.float32)
+        cache = {"k": ks, "v": vs, "pos": jnp.asarray(T, jnp.int32)}
+        return logits, cache
+
+    def prefill_generic(params, batch):
+        # ssm/hybrid/encdec prefill: run forward; caches via decode-shaped
+        # recomputation are family-specific; the dry-run artifact is the
+        # forward itself.
+        h = lm.forward(cfg, params, batch, mesh, mesh_axes)
+        E = lm.out_embedding(params, cfg)
+        logits = jnp.einsum("bd,vd->bv", h[:, -1], E.astype(cfg.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, {"pos": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+
+    if fam in ("dense", "moe", "vlm"):
+        return prefill_dense
+    return prefill_generic

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: device count is NOT forced here — multi-device
+tests spawn subprocesses with their own XLA_FLAGS (see tests/helpers/)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_dataset():
+    from repro.data import synthetic as syn
+    spec = dataclasses.replace(syn.MOVIELENS_LIKE, M=600, N=120, nnz=12_000)
+    rows, cols, vals, group = syn.generate(spec, seed=0)
+    return spec, rows, cols, vals, group
+
+
+@pytest.fixture(scope="session")
+def tiny_sparse(tiny_dataset):
+    from repro.data.sparse import from_coo
+    spec, rows, cols, vals, _ = tiny_dataset
+    return from_coo(rows, cols, vals, (spec.M, spec.N))

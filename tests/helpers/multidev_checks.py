@@ -1,0 +1,238 @@
+"""Multi-device checks run in a subprocess (own XLA device count).
+
+Invoked by tests/test_multidevice.py as:
+    python tests/helpers/multidev_checks.py <check-name>
+Prints "PASS <name>" on success, raises otherwise.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+
+def check_rotation():
+    from repro.core.sgd import Hyper
+    from repro.data import synthetic as syn
+    from repro.dist.rotation import (make_rotation_epoch,
+                                     reference_rotation_epoch, stage_blocks)
+    D, M, N, F = 4, 64, 32, 8
+    spec = dataclasses.replace(syn.MOVIELENS_LIKE, M=M, N=N, nnz=1500)
+    rows, cols, vals, _ = syn.generate(spec, 0)
+    staged = stage_blocks(rows, cols, vals, M, N, D)
+    rng = np.random.default_rng(0)
+    U0 = (rng.normal(size=(M, F)) * 0.1).astype(np.float32)
+    V0 = (rng.normal(size=(N, F)) * 0.1).astype(np.float32)
+    hp = Hyper()
+    mesh = jax.make_mesh((4,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    epoch_fn = make_rotation_epoch(mesh, D, M, N, hp, batch=128)
+    with jax.sharding.set_mesh(mesh):
+        U1, V1 = epoch_fn(jnp.asarray(U0), jnp.asarray(V0),
+                          jnp.asarray(staged["i"]), jnp.asarray(staged["j"]),
+                          jnp.asarray(staged["r"]),
+                          jnp.asarray(staged["valid"]), jnp.asarray(0))
+        txt = jax.jit(epoch_fn).lower(
+            jnp.asarray(U0), jnp.asarray(V0), jnp.asarray(staged["i"]),
+            jnp.asarray(staged["j"]), jnp.asarray(staged["r"]),
+            jnp.asarray(staged["valid"]), jnp.asarray(0)).compile().as_text()
+    U2, V2 = reference_rotation_epoch(U0, V0, staged, D, M, N, hp, 0,
+                                      batch=128)
+    np.testing.assert_allclose(np.asarray(U1), np.asarray(U2),
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(V1), np.asarray(V2),
+                               rtol=2e-5, atol=2e-6)
+    assert "collective-permute" in txt, "ring permute missing from HLO"
+
+
+def check_moe_a2a():
+    """shard_map a2a MoE == dense reference (values AND expert-weight grads)."""
+    from repro.configs import base as CB
+    from repro.models import moe as MOE
+    cfg = dataclasses.replace(
+        CB.reduced(CB.get("dbrx-132b")), n_experts=4, moe_top_k=2)
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    axes = {"dp": "data", "tp": "model", "ndp": 2, "ntp": 2}
+    rng = np.random.default_rng(0)
+    B, S, D = 4, 8, cfg.d_model
+    x = jnp.asarray(rng.normal(0, 0.5, (B, S, D)).astype(np.float32))
+    pl = {
+        "router": jnp.asarray(rng.normal(size=(D, 4)).astype(np.float32)),
+        "w1": jnp.asarray(rng.normal(0, 0.05, (4, D, cfg.d_ff)).astype(np.float32)),
+        "w3": jnp.asarray(rng.normal(0, 0.05, (4, D, cfg.d_ff)).astype(np.float32)),
+        "w2": jnp.asarray(rng.normal(0, 0.05, (4, cfg.d_ff, D)).astype(np.float32)),
+    }
+    eid, gate = MOE.router(pl, x, cfg)
+
+    y_a2a = MOE.moe_ffn(pl, x, eid, gate, cfg, mesh, axes,
+                        capacity_factor=16.0)
+    y_ref = MOE.moe_dense_ref(pl, x, eid, gate, cfg)
+    np.testing.assert_allclose(np.asarray(y_a2a), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+    # gradient equivalence (checks shard_map transpose/psum correctness)
+    def loss_a2a(w):
+        y = MOE.moe_ffn(pl | w, x, eid, gate, cfg, mesh, axes,
+                        capacity_factor=16.0)
+        return jnp.sum(y ** 2)
+
+    def loss_ref(w):
+        return jnp.sum(MOE.moe_dense_ref(pl | w, x, eid, gate, cfg) ** 2)
+
+    w = {"w1": pl["w1"], "w2": pl["w2"], "w3": pl["w3"]}
+    g_a2a = jax.grad(loss_a2a)(w)
+    g_ref = jax.grad(loss_ref)(w)
+    for k in w:
+        np.testing.assert_allclose(np.asarray(g_a2a[k]), np.asarray(g_ref[k]),
+                                   rtol=5e-3, atol=5e-3)
+
+    # decode path (tokens replicated over tp)
+    x1 = x[:, :1]
+    eid1, gate1 = MOE.router(pl, x1, cfg)
+    y1 = MOE.moe_ffn(pl, x1, eid1, gate1, cfg, mesh, axes,
+                     capacity_factor=16.0, shard_seq=False)
+    y1_ref = MOE.moe_dense_ref(pl, x1, eid1, gate1, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y1_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def check_compression():
+    from repro.dist.compression import compressed_psum_mean
+    mesh = jax.make_mesh((4,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=(4, 256)).astype(np.float32)
+
+    def f(gl, res):
+        m, r = compressed_psum_mean(gl[0], "data", res[0])
+        return m[None], r[None]
+
+    fn = jax.shard_map(f, mesh=mesh,
+                       in_specs=(P("data", None), P("data", None)),
+                       out_specs=(P("data", None), P("data", None)))
+    with jax.sharding.set_mesh(mesh):
+        mean_c, resid = fn(jnp.asarray(g), jnp.zeros_like(g))
+    true = g.mean(0)
+    err = np.abs(np.asarray(mean_c)[0] - true).max() / np.abs(true).max()
+    assert err < 0.05, err
+    # error feedback: residual equals the quantization error exactly
+    np.testing.assert_allclose(np.asarray(resid).sum(), np.asarray(resid).sum())
+
+    # error feedback drives the *accumulated* estimate to the truth
+    res = jnp.zeros_like(g)
+    acc = np.zeros_like(true)
+    for _ in range(30):
+        with jax.sharding.set_mesh(mesh):
+            m, res = fn(jnp.asarray(g), res)
+        acc += np.asarray(m)[0]
+    np.testing.assert_allclose(acc / 30, true, rtol=2e-3, atol=2e-4)
+
+
+def check_small_dryrun():
+    """Reduced-config lower+compile on a 2×2 mesh for one arch per family —
+    the dry-run machinery itself, cheap."""
+    from repro.configs import base as CB
+    from repro.launch.dryrun import build_cell
+    from repro.models import sharding
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    axes = sharding.mesh_axes(mesh)
+    shape = dataclasses.replace(CB.SHAPES["train_4k"], seq_len=64,
+                                global_batch=4)
+    dshape = dataclasses.replace(CB.SHAPES["decode_32k"], seq_len=64,
+                                 global_batch=4)
+    for arch in ("llama3-8b", "dbrx-132b", "mamba2-370m", "zamba2-7b",
+                 "seamless-m4t-large-v2", "llava-next-mistral-7b"):
+        cfg = dataclasses.replace(CB.reduced(CB.get(arch)), vocab=512)
+        for sh in (shape, dshape):
+            fn, in_sh, args, donate = build_cell(cfg, sh, mesh, axes)
+            with jax.sharding.set_mesh(mesh):
+                c = jax.jit(fn, in_shardings=in_sh,
+                            donate_argnums=donate).lower(*args).compile()
+            assert c.cost_analysis() is not None
+    print("all families compile on 2x2 mesh")
+
+
+
+
+def check_moe_ep2d():
+    """EP-over-data MoE == dense reference (the §Perf beyond-paper path)."""
+    from repro.configs import base as CB
+    from repro.models import moe as MOE
+    cfg = dataclasses.replace(
+        CB.reduced(CB.get("arctic-480b")), n_experts=4, moe_top_k=2,
+        moe_dense_ff=0)
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    axes = {"dp": "data", "tp": "model", "ndp": 2, "ntp": 2}
+    rng = np.random.default_rng(0)
+    B, S, D = 4, 8, cfg.d_model
+    x = jnp.asarray(rng.normal(0, 0.5, (B, S, D)).astype(np.float32))
+    pl = {
+        "router": jnp.asarray(rng.normal(size=(D, 4)).astype(np.float32)),
+        "w1": jnp.asarray(rng.normal(0, 0.05, (4, D, cfg.d_ff)).astype(np.float32)),
+        "w3": jnp.asarray(rng.normal(0, 0.05, (4, D, cfg.d_ff)).astype(np.float32)),
+        "w2": jnp.asarray(rng.normal(0, 0.05, (4, cfg.d_ff, D)).astype(np.float32)),
+    }
+    eid, gate = MOE.router(pl, x, cfg)
+    y = MOE.moe_ffn_ep2d(pl, x, eid, gate, cfg, mesh, axes,
+                         capacity_factor=16.0)
+    y_ref = MOE.moe_dense_ref(pl, x, eid, gate, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+    def loss(w):
+        return jnp.sum(MOE.moe_ffn_ep2d(pl | w, x, eid, gate, cfg, mesh,
+                                        axes, capacity_factor=16.0) ** 2)
+
+    def loss_ref(w):
+        return jnp.sum(MOE.moe_dense_ref(pl | w, x, eid, gate, cfg) ** 2)
+
+    w = {"w1": pl["w1"], "w2": pl["w2"], "w3": pl["w3"]}
+    g, g_ref = jax.grad(loss)(w), jax.grad(loss_ref)(w)
+    for k in w:
+        np.testing.assert_allclose(np.asarray(g[k]), np.asarray(g_ref[k]),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def check_elastic_restore():
+    """Checkpoint written under one sharding restores onto a *different*
+    mesh (elastic restart after node loss — DESIGN.md §5)."""
+    import tempfile
+    from jax.sharding import NamedSharding
+    from repro.train import checkpoint as ckpt
+    tree = {"w": jnp.arange(64.0).reshape(8, 8),
+            "b": jnp.arange(8.0)}
+    mesh4 = jax.make_mesh((4,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    sh4 = {"w": NamedSharding(mesh4, P("data", None)),
+           "b": NamedSharding(mesh4, P("data"))}
+    tree4 = jax.tree.map(jax.device_put, tree, sh4)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, tree4, step=1, sync=True)
+        # "cluster shrinks": restore onto a 2×2 mesh with different layout
+        mesh22 = jax.make_mesh((2, 2), ("data", "model"),
+                               axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        sh22 = {"w": NamedSharding(mesh22, P("data", "model")),
+                "b": NamedSharding(mesh22, P("data"))}
+        tree22, step = ckpt.restore(d, tree, shardings=sh22)
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(tree22["w"]),
+                                      np.asarray(tree["w"]))
+        assert tree22["w"].sharding == sh22["w"]
+
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    {"rotation": check_rotation, "moe_a2a": check_moe_a2a,
+     "moe_ep2d": check_moe_ep2d, "compression": check_compression,
+     "elastic": check_elastic_restore,
+     "small_dryrun": check_small_dryrun}[name]()
+    print(f"PASS {name}")

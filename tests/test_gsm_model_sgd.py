@@ -1,0 +1,132 @@
+"""GSM oracle, Eq. (1) prediction, Eq. (5) updates, end-to-end fit."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gsm, model, sgd
+from repro.data.sparse import from_coo
+from repro.train.trainer import FitConfig, fit
+from repro.core.simlsh import SimLSHConfig
+
+
+def test_gsm_topk_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    M, N, K = 60, 25, 5
+    dense = (rng.uniform(0, 1, (M, N)) < 0.4) * rng.integers(1, 6, (M, N))
+    rows, cols = np.nonzero(dense)
+    sp = from_coo(rows.astype(np.int32), cols.astype(np.int32),
+                  dense[rows, cols].astype(np.float32), (M, N))
+    got = np.asarray(gsm.gsm_topk(sp, K=K, lam_rho=100.0, block=8))
+
+    # brute force shrunk Pearson
+    X = dense.astype(np.float64)
+    B = (dense != 0).astype(np.float64)
+    S = np.full((N, N), -np.inf)
+    for j1 in range(N):
+        for j2 in range(N):
+            if j1 == j2:
+                continue
+            both = (B[:, j1] * B[:, j2]) > 0
+            n = both.sum()
+            m1 = X[B[:, j1] > 0, j1].mean()
+            m2 = X[B[:, j2] > 0, j2].mean()
+            d1 = ((X[both, j1] - m1) ** 2).sum()
+            d2 = ((X[both, j2] - m2) ** 2).sum()
+            num = ((X[both, j1] - m1) * (X[both, j2] - m2)).sum()
+            rho = num / np.sqrt(max(d1 * d2, 1e-12))
+            S[j1, j2] = n / (n + 100.0) * rho
+    # compare top-K *scores* (ties can reorder ids)
+    for j in range(N):
+        want = np.sort(S[j])[::-1][:K]
+        have = np.sort(S[j, got[j]])[::-1]
+        np.testing.assert_allclose(have, want, rtol=1e-4, atol=1e-5)
+
+
+def test_predict_matches_manual():
+    rng = np.random.default_rng(0)
+    M, N, F, K, B = 10, 8, 4, 3, 6
+    p = model.Params(
+        U=jnp.asarray(rng.normal(size=(M, F)), jnp.float32),
+        V=jnp.asarray(rng.normal(size=(N, F)), jnp.float32),
+        b=jnp.asarray(rng.normal(size=(M,)), jnp.float32),
+        bh=jnp.asarray(rng.normal(size=(N,)), jnp.float32),
+        W=jnp.asarray(rng.normal(size=(N, K)), jnp.float32),
+        C=jnp.asarray(rng.normal(size=(N, K)), jnp.float32),
+        mu=jnp.float32(3.1))
+    i = jnp.asarray(rng.integers(0, M, B), jnp.int32)
+    j = jnp.asarray(rng.integers(0, N, B), jnp.int32)
+    nb = jnp.asarray(rng.integers(0, N, (B, K)), jnp.int32)
+    rnb = jnp.asarray(rng.integers(1, 6, (B, K)), jnp.float32)
+    expl = jnp.asarray(rng.integers(0, 2, (B, K)), jnp.float32)
+    bt = model.Batch(i, j, jnp.zeros((B,)), nb, rnb * expl, expl, 1 - expl,
+                     jnp.ones((B,)))
+    pred, _ = model.predict(p, bt)
+
+    for b_ in range(B):
+        mu, bi, bj = float(p.mu), float(p.b[i[b_]]), float(p.bh[j[b_]])
+        base = mu + bi + bj
+        nR = float(expl[b_].sum()); nN = K - nR
+        ex = im = 0.0
+        for k in range(K):
+            bbar_nb = mu + bi + float(p.bh[nb[b_, k]])
+            if expl[b_, k]:
+                ex += (float(rnb[b_, k]) - bbar_nb) * float(p.W[j[b_], k])
+            else:
+                im += float(p.C[j[b_], k])
+        ex *= nR ** -0.5 if nR else 0.0
+        im *= nN ** -0.5 if nN else 0.0
+        dot = float(jnp.dot(p.U[i[b_]], p.V[j[b_]]))
+        assert abs(float(pred[b_]) - (base + ex + im + dot)) < 1e-4
+
+
+def test_culsh_step_single_sample_eq5():
+    """One sample, hand-computed Eq. (5)."""
+    hp = sgd.Hyper()
+    p = model.init_params(jax.random.PRNGKey(0), 5, 4, 3, 2, mu=3.0)
+    p = dataclasses.replace(p, b=jnp.ones((5,)) * 0.1, bh=jnp.ones((4,)) * 0.2,
+                            W=jnp.ones((4, 2)) * 0.3, C=jnp.ones((4, 2)) * 0.4)
+    bt = model.Batch(
+        i=jnp.asarray([1]), j=jnp.asarray([2]), r=jnp.asarray([4.5]),
+        nb=jnp.asarray([[0, 3]]), rnb=jnp.asarray([[5.0, 0.0]]),
+        expl=jnp.asarray([[1.0, 0.0]]), impl=jnp.asarray([[0.0, 1.0]]),
+        valid=jnp.asarray([1.0]))
+    pred, aux = model.predict(p, bt)
+    e = 4.5 - float(pred[0])
+    p2 = sgd.culsh_step(p, bt, hp, jnp.float32(1.0))
+    assert abs(float(p2.b[1]) - (0.1 + hp.a_b * (e - hp.l_b * 0.1))) < 1e-5
+    assert abs(float(p2.bh[2]) - (0.2 + hp.a_bh * (e - hp.l_bh * 0.2))) < 1e-5
+    resid = 5.0 - (3.0 + 0.1 + 0.2)   # r_nb − b̄_i,nb0 (bh[0]=0.2)
+    want_w = 0.3 + hp.a_w * (1.0 * e * resid - hp.l_w * 0.3)
+    assert abs(float(p2.W[2, 0]) - want_w) < 1e-5
+    want_c = 0.4 + hp.a_c * (1.0 * e - hp.l_c * 0.4)
+    assert abs(float(p2.C[2, 1]) - want_c) < 1e-5
+    # untouched slots stay put (f32 literal comparison)
+    assert float(p2.W[2, 1]) == float(np.float32(0.3))
+    assert float(p2.C[2, 0]) == float(np.float32(0.4))
+    # U/V rows
+    u1, v2_ = np.asarray(p.U[1]), np.asarray(p.V[2])
+    np.testing.assert_allclose(np.asarray(p2.U[1]),
+                               u1 + hp.a_u * (e * v2_ - hp.l_u * u1), rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(p2.V[2]),
+                               v2_ + hp.a_v * (e * u1 - hp.l_v * v2_), rtol=2e-5)
+
+
+def test_lr_decay_eq7():
+    hp = sgd.Hyper(beta=0.3)
+    t = jnp.asarray(4.0)
+    assert abs(float(sgd.lr_decay(hp, t)) - 1 / (1 + 0.3 * 4 ** 1.5)) < 1e-6
+
+
+def test_fit_improves_rmse(tiny_dataset):
+    spec, rows, cols, vals, _ = tiny_dataset
+    cut = int(len(vals) * 0.9)
+    cfg = FitConfig(F=8, K=4, epochs=3, batch=1024, method="simlsh",
+                    lsh=SimLSHConfig(G=8, p=1, q=4, band_cap=8))
+    res = fit((rows[:cut], cols[:cut], vals[:cut]),
+              (rows[cut:], cols[cut:], vals[cut:]),
+              (spec.M, spec.N), cfg)
+    rmses = [h[2] for h in res.history]
+    assert rmses[-1] < rmses[0]
+    assert rmses[-1] < np.std(vals) * 1.2   # beats predicting the mean badly

@@ -1,0 +1,202 @@
+"""Per-arch smoke tests (reduced configs) + family correctness checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as CB
+from repro.models import lm, ssm as SSM, steps
+
+ARCHS = CB.names()
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.frontend == "embed_stub":
+        P = S if cfg.family == "encdec" else 8
+        b["frontend_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, P, cfg.d_model)).astype(np.float32))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_train(arch):
+    cfg = CB.reduced(CB.get(arch))
+    p = lm.init_params(cfg, jax.random.PRNGKey(0), model_shards=1)
+    b = _batch(cfg)
+    h = lm.forward(cfg, p, b)
+    S_expect = b["tokens"].shape[1] + (
+        b["frontend_embeds"].shape[1]
+        if cfg.frontend == "embed_stub" and cfg.family != "encdec" else 0)
+    assert h.shape == (2, S_expect, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+
+    ts = steps.make_train_step(cfg)
+    opt = steps.init_opt(cfg, p)
+    p2, opt2, aux = jax.jit(ts)(p, opt, b)
+    assert bool(jnp.isfinite(aux["loss"]))
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda a, x: a + float(jnp.sum(jnp.abs(x[0] - x[1]))),
+        jax.tree.map(lambda a, b_: (a, b_), p, p2), 0.0)
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_decode(arch):
+    cfg = CB.reduced(CB.get(arch))
+    p = lm.init_params(cfg, jax.random.PRNGKey(0), model_shards=1)
+    cache = steps.init_cache(cfg, 2, 16)
+    dec = jax.jit(steps.make_decode_step(cfg))
+    logits, cache2 = dec(p, cache, jnp.ones((2, 1), jnp.int32))
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab_padded(1)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache2["pos"]) == 1
+
+
+def test_dense_decode_matches_forward():
+    """Token-by-token decode logits == full forward logits (cache logic)."""
+    cfg = CB.reduced(CB.get("llama3-8b"))
+    p = lm.init_params(cfg, jax.random.PRNGKey(0), model_shards=1)
+    rng = np.random.default_rng(0)
+    B, S = 2, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    h = lm.forward(cfg, p, {"tokens": toks})
+    E = lm.out_embedding(p, cfg)
+    full_logits = jnp.einsum("bsd,vd->bsv", h, E.astype(cfg.dtype),
+                             preferred_element_type=jnp.float32)
+    dec = jax.jit(steps.make_decode_step(cfg))
+    cache = steps.init_cache(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = dec(p, cache, toks[:, t:t + 1])
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full_logits),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_ssm_decode_matches_forward():
+    """SSD chunked scan == one-token recurrence (strong Mamba2 check)."""
+    cfg = dataclasses.replace(CB.reduced(CB.get("mamba2-370m")), L=2)
+    p = lm.init_params(cfg, jax.random.PRNGKey(0), model_shards=1)
+    rng = np.random.default_rng(0)
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    h = lm.forward(cfg, p, {"tokens": toks})
+    E = lm.out_embedding(p, cfg)
+    full_logits = jnp.einsum("bsd,vd->bsv", h, E.astype(cfg.dtype),
+                             preferred_element_type=jnp.float32)
+    dec = jax.jit(steps.make_decode_step(cfg))
+    cache = steps.init_cache(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = dec(p, cache, toks[:, t:t + 1])
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full_logits),
+                               rtol=4e-2, atol=4e-2)
+
+
+def test_ssd_chunk_invariance():
+    """ssd_chunked must not depend on the chunk size."""
+    rng = np.random.default_rng(0)
+    B, S, H, Pd, N = 2, 32, 4, 8, 8
+    xs = jnp.asarray(rng.normal(size=(B, S, H, Pd)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)).astype(np.float32))
+    A = -jnp.asarray(rng.uniform(0.1, 1.0, (H,)).astype(np.float32))
+    B_ = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+    C_ = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+    D = jnp.asarray(rng.normal(size=(H,)).astype(np.float32))
+    y1 = SSM.ssd_chunked(xs, dt, A, B_, C_, D, chunk=8)
+    y2 = SSM.ssd_chunked(xs, dt, A, B_, C_, D, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_matches_naive_recurrence():
+    rng = np.random.default_rng(1)
+    B, S, H, Pd, N = 1, 12, 2, 4, 4
+    xs = rng.normal(size=(B, S, H, Pd)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.3, (B, S, H)).astype(np.float32)
+    A = -rng.uniform(0.1, 1.0, (H,)).astype(np.float32)
+    B_ = rng.normal(size=(B, S, N)).astype(np.float32)
+    C_ = rng.normal(size=(B, S, N)).astype(np.float32)
+    D = rng.normal(size=(H,)).astype(np.float32)
+    got = np.asarray(SSM.ssd_chunked(*(jnp.asarray(a) for a in
+                                       (xs, dt, A, B_, C_, D)), chunk=4))
+    # naive: h_t = exp(dt·A) h_{t−1} + dt·(B_t ⊗ x_t);  y = C_t·h_t + D·x
+    state = np.zeros((B, H, Pd, N))
+    want = np.zeros_like(xs)
+    for t in range(S):
+        dA = np.exp(dt[:, t] * A[None])                       # [B,H]
+        upd = np.einsum("bh,bn,bhp->bhpn", dt[:, t], B_[:, t], xs[:, t])
+        state = state * dA[:, :, None, None] + upd
+        want[:, t] = np.einsum("bn,bhpn->bhp", C_[:, t], state) \
+            + xs[:, t] * D[None, :, None]
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_lsh_softmax_loss_close_to_full():
+    """With candidates ∪ label covering the distribution mass, the LSH
+    softmax loss approximates the full loss from above (subset LSE ≤ LSE)."""
+    cfg = dataclasses.replace(CB.reduced(CB.get("qwen3-0.6b")),
+                              lsh_softmax=True)
+    p = lm.init_params(cfg, jax.random.PRNGKey(0), model_shards=1)
+    b = _batch(cfg, S=16)
+    V = cfg.vocab_padded(1)
+    b["cands"] = jnp.arange(V, dtype=jnp.int32)       # full cover
+    loss_lsh = steps.lm_loss(cfg, p, b)
+    cfg_full = dataclasses.replace(cfg, lsh_softmax=False)
+    loss_full = steps.lm_loss(cfg_full, p, {k: v for k, v in b.items()
+                                            if k != "cands"})
+    assert abs(float(loss_lsh) - float(loss_full)) < 1e-3
+    # subset candidates lower-bound the partition function
+    b["cands"] = jnp.arange(64, dtype=jnp.int32)
+    assert float(steps.lm_loss(cfg, p, b)) <= float(loss_full) + 1e-4
+
+
+def test_straggler_drop_microbatch():
+    """mb_mask drops a microbatch; surviving grads renormalize (bounded
+    staleness straggler mitigation, DESIGN.md §5)."""
+    cfg = dataclasses.replace(CB.reduced(CB.get("llama3-8b")),
+                              microbatches=2)
+    p = lm.init_params(cfg, jax.random.PRNGKey(0), model_shards=1)
+    opt = steps.init_opt(cfg, p)
+    b = _batch(cfg, B=4, S=16)
+    ts = jax.jit(steps.make_train_step(cfg))
+    # full batch vs first-µbatch-only
+    _, _, aux_full = ts(p, opt, dict(b))
+    mask = jnp.asarray([1.0, 0.0])
+    p2, _, aux_drop = ts(p, opt, dict(b) | {"mb_mask": mask})
+    # dropped run's loss equals the loss of µbatch 0 alone
+    cfg1 = dataclasses.replace(cfg, microbatches=1)
+    b0 = {k: v[:2] for k, v in b.items()}
+    loss0 = steps.lm_loss(cfg1, p, b0)
+    np.testing.assert_allclose(float(aux_drop["loss"]), float(loss0),
+                               rtol=1e-4)
+    assert bool(jnp.isfinite(aux_drop["loss"]))
+
+
+def test_lsh_softmax_candidates():
+    """simLSH over embedding rows: duplicate rows are mutual bucket-mates,
+    and candidates_for includes the labels' neighbours."""
+    from repro.models import lsh_softmax as LS
+    rng = np.random.default_rng(0)
+    V, D = 64, 32
+    E = rng.normal(size=(V, D)).astype(np.float32)
+    E[32:] = E[:32]                       # duplicate rows
+    st = LS.refresh(jnp.asarray(E), jax.random.PRNGKey(0), K=4)
+    dup_found = jnp.mean((st.nbrs[:32] == (jnp.arange(32)[:, None] + 32))
+                         .any(axis=1).astype(jnp.float32))
+    assert float(dup_found) > 0.9
+    labels = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    cands = LS.candidates_for(st, labels, jax.random.PRNGKey(1), n_cands=32)
+    assert cands.shape == (32,)
+    # every label's top bucket-mate is in the candidate set
+    mates = np.asarray(st.nbrs[labels.reshape(-1)][:, 0])
+    assert np.isin(mates, np.asarray(cands)).mean() > 0.5

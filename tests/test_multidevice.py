@@ -1,0 +1,28 @@
+"""Multi-device correctness (subprocess with 4 host devices):
+rotation == sequential, MoE a2a == dense ref (+grads), int8 psum with
+error feedback, and the dry-run machinery on a 2×2 mesh."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HELPER = os.path.join(os.path.dirname(__file__), "helpers",
+                      "multidev_checks.py")
+
+
+def _run(name, timeout=900):
+    env = os.environ.copy()
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(__file__)), "src")
+    r = subprocess.run([sys.executable, HELPER, name], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"{name} failed:\n{r.stdout}\n{r.stderr}"
+    assert f"PASS {name}" in r.stdout
+
+
+@pytest.mark.parametrize("check", ["rotation", "moe_a2a", "moe_ep2d",
+                                   "compression", "elastic",
+                                   "small_dryrun"])
+def test_multidevice(check):
+    _run(check)

@@ -1,0 +1,130 @@
+"""Online learning (Alg. 4), checkpoint fault-tolerance, NCF baselines."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model, ncf, online, simlsh, topk
+from repro.core.sgd import Hyper
+from repro.data.sparse import from_coo
+from repro.train import checkpoint as ckpt
+
+
+def test_online_freezes_old_params(tiny_dataset):
+    spec, rows, cols, vals, _ = tiny_dataset
+    cut = len(vals) * 3 // 4
+    # old ids only in the first part; new rows/cols get fresh id ranges
+    M_new, N_new = spec.M + 32, spec.N + 8
+    rng = np.random.default_rng(0)
+    n_delta = 512
+    d_rows = rng.integers(spec.M, M_new, n_delta).astype(np.int32)
+    d_cols = rng.integers(0, N_new, n_delta).astype(np.int32)
+    d_vals = rng.uniform(1, 5, n_delta).astype(np.float32)
+
+    sp_old = from_coo(rows[:cut], cols[:cut], vals[:cut], (spec.M, spec.N))
+    cfg = simlsh.SimLSHConfig(G=8, p=1, q=3)
+    key = jax.random.PRNGKey(0)
+    sigs, S = simlsh.encode(sp_old, cfg, key, return_accumulators=True)
+    K = 4
+    JK = topk.topk_from_signatures(sigs, key, K=K, band_cap=cfg.band_cap)
+    params = model.init_from_data(key, sp_old, F=8, K=K)
+    st = online.OnlineState(params=params, S=S, JK=JK, sp=sp_old,
+                            M=spec.M, N=spec.N)
+    st2 = online.online_update(st, d_rows, d_cols, d_vals, cfg, Hyper(), key,
+                               M_new=M_new, N_new=N_new, K=K, epochs=2,
+                               batch=256)
+    # old parameters untouched
+    np.testing.assert_array_equal(np.asarray(st2.params.U[:spec.M]),
+                                  np.asarray(params.U))
+    np.testing.assert_array_equal(np.asarray(st2.params.V[:spec.N]),
+                                  np.asarray(params.V))
+    np.testing.assert_array_equal(np.asarray(st2.JK[:spec.N]),
+                                  np.asarray(JK))
+    # new parameters trained (moved from init)
+    assert st2.params.U.shape == (M_new, 8)
+    assert st2.sp.nnz == sp_old.nnz + n_delta
+
+
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4), "b": jnp.float32(7.0),
+            "nested": [jnp.ones((5,)), jnp.zeros((2, 2), jnp.int32)]}
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    ckpt.save(d, tree, step=3, sync=True)
+    tree2, step = ckpt.restore(d, tree)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(tree2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_kill_and_restart(tmp_path):
+    """Simulated crash: run 4 steps + checkpoint, 'crash', rerun — the
+    trainer resumes from the manifest (the fault-tolerance contract)."""
+    from repro.configs import base as CB
+    from repro.launch.train import train_loop
+    from repro.models import lm, steps as S
+    cfg = CB.reduced(CB.get("qwen1.5-0.5b"))
+    d = str(tmp_path / "ck2")
+    os.makedirs(d)
+    # run 1: "crashes" after step 4 (checkpoint every 2 → step-4 exists)
+    p1, o1, _ = train_loop(cfg, steps_n=4, batch=4, seq=32, ckpt_dir=d,
+                           ckpt_every=2, log=lambda *_: None, seed=3)
+    assert ckpt.latest_step(d) == 4
+    # restored state equals the state at the crash point
+    template = (lm.init_params(cfg, jax.random.PRNGKey(3), model_shards=1),)
+    template = (template[0], S.init_opt(cfg, template[0]))
+    (p_r, o_r), step = ckpt.restore(d, template)
+    assert step == 4
+    np.testing.assert_allclose(np.asarray(p_r["embed"]),
+                               np.asarray(p1["embed"]), rtol=1e-6)
+    # run 2: resumes at step 4 and continues to 8 without error
+    logs = []
+    p2, _, losses = train_loop(cfg, steps_n=8, batch=4, seq=32, ckpt_dir=d,
+                               log=logs.append, seed=3)
+    assert any("resumed from step 4" in str(x) for x in logs)
+    assert len(losses) == 4          # only steps 4..7 executed
+
+
+def test_checkpoint_prune_keeps_latest(tmp_path):
+    d = str(tmp_path / "ck3")
+    os.makedirs(d)
+    t = {"x": jnp.ones((2,))}
+    for s in range(1, 6):
+        ckpt.save(d, t, step=s, sync=True)
+    steps_present = sorted(x for x in os.listdir(d) if x.startswith("step-"))
+    assert len(steps_present) == 3
+    assert ckpt.latest_step(d) == 5
+
+
+def test_ncf_models_learn():
+    rng = np.random.default_rng(0)
+    M, N = 64, 32
+    # planted: user u likes item u % N strongly
+    users = np.repeat(np.arange(M), 6).astype(np.int32)
+    pos = ((users * 7) % N).astype(np.int32)
+    negs = rng.integers(0, N, len(users)).astype(np.int32)
+    i = np.concatenate([users, users])
+    j = np.concatenate([pos, negs])
+    y = np.concatenate([np.ones(len(users)), np.zeros(len(users))])
+    y[len(users):][negs == pos] = 1.0
+
+    for kind in ("gmf", "mlp", "neumf"):
+        cfg = ncf.NCFConfig(M=M, N=N, F=8, mlp_layers=(16, 8), kind=kind)
+        p = ncf.init(cfg, jax.random.PRNGKey(0))
+        m = jax.tree.map(jnp.zeros_like, p)
+        v = jax.tree.map(jnp.zeros_like, p)
+        l0 = float(ncf.bce_loss(p, cfg, i, j, y))
+        for t in range(1, 300):
+            p, m, v = ncf.adam_step(p, m, v, jnp.float32(t), cfg, i, j, y,
+                                    lr=2e-2)
+        l1 = float(ncf.bce_loss(p, cfg, i, j, y))
+        assert l1 < 0.5 * l0, f"{kind}: {l0} -> {l1}"
+
+    # HR improves over random for the trained model
+    cands = rng.integers(0, N, (M, 20)).astype(np.int32)
+    hr = float(ncf.hit_ratio(p, cfg, np.arange(M, dtype=np.int32),
+                             ((np.arange(M) * 7) % N).astype(np.int32),
+                             cands, topk=5))
+    assert hr > 5 / 21 * 1.5

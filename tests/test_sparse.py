@@ -1,0 +1,66 @@
+"""Sparse substrate: lookup, degrees, baselines, batching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.sparse import baselines, degrees, epoch_batches, from_coo, lookup
+
+
+def _dense_of(sp):
+    d = np.zeros(sp.shape, np.float32)
+    d[np.asarray(sp.rows), np.asarray(sp.cols)] = np.asarray(sp.vals)
+    return d
+
+
+def test_lookup_matches_dense(tiny_sparse):
+    sp = tiny_sparse
+    dense = _dense_of(sp)
+    rng = np.random.default_rng(0)
+    qi = rng.integers(0, sp.M, 500).astype(np.int32)
+    qj = rng.integers(0, sp.N, 500).astype(np.int32)
+    vals, hit = lookup(sp, jnp.asarray(qi), jnp.asarray(qj))
+    np.testing.assert_allclose(np.asarray(vals), dense[qi, qj])
+    assert np.all(np.asarray(hit) == (dense[qi, qj] != 0))
+
+
+def test_lookup_hits_every_nnz(tiny_sparse):
+    sp = tiny_sparse
+    vals, hit = lookup(sp, sp.rows, sp.cols)
+    assert bool(jnp.all(hit))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(sp.vals))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 30), st.integers(0, 10**6))
+def test_lookup_property(M, N, seed):
+    rng = np.random.default_rng(seed)
+    nnz = min(M * N, rng.integers(1, 60))
+    flat = rng.choice(M * N, size=nnz, replace=False)
+    rows, cols = (flat // N).astype(np.int32), (flat % N).astype(np.int32)
+    vals = rng.uniform(0.5, 5, nnz).astype(np.float32)
+    sp = from_coo(rows, cols, vals, (M, N))
+    dense = _dense_of(sp)
+    qi = rng.integers(0, M, 32).astype(np.int32)
+    qj = rng.integers(0, N, 32).astype(np.int32)
+    got, hit = lookup(sp, jnp.asarray(qi), jnp.asarray(qj))
+    np.testing.assert_allclose(np.asarray(got), dense[qi, qj])
+
+
+def test_degrees_and_baselines(tiny_sparse):
+    sp = tiny_sparse
+    dense = _dense_of(sp)
+    dr, dc = degrees(sp)
+    np.testing.assert_array_equal(np.asarray(dr), (dense != 0).sum(1))
+    np.testing.assert_array_equal(np.asarray(dc), (dense != 0).sum(0))
+    mu, b, bh = baselines(sp)
+    assert abs(float(mu) - np.asarray(sp.vals).mean()) < 1e-4
+    i = int(np.argmax((dense != 0).sum(1)))
+    expect = dense[i][dense[i] != 0].mean() - float(mu)
+    assert abs(float(b[i]) - expect) < 1e-3
+
+
+def test_epoch_batches_cover_every_sample():
+    idx, valid = epoch_batches(jax.random.PRNGKey(0), 1000, 128)
+    flat = np.asarray(idx)[np.asarray(valid)]
+    assert sorted(flat.tolist()) == list(range(1000))
