@@ -60,7 +60,7 @@ def bench_serial_vs_lsh(dss):
         row = []
         for method in ("gsm", "simlsh"):
             cfg = FitConfig(K=8, method=method, lsh=LSH)
-            _, secs, _ = build_neighbours(sp, cfg, key)
+            _, secs, _, _ = build_neighbours(sp, cfg, key)
             row.append(secs)
             emit(f"table6.neighbour.{method}.N{N}", secs,
                  f"nnz={sp.nnz}")
@@ -154,7 +154,7 @@ def bench_online(dss):
                             JK=res_old.JK,
                             sp=from_coo(rows[old], cols[old], vals[old],
                                         (M0, N0)),
-                            M=M0, N=N0)
+                            M=M0, N=N0, hash_key=res_old.hash_key)
     st2 = online.online_update(st, rows[~old], cols[~old], vals[~old],
                                LSH, Hyper(), jax.random.PRNGKey(0),
                                M_new=spec.M, N_new=spec.N, K=8, epochs=3)

@@ -1,0 +1,182 @@
+"""Serving benchmark: candidate-only (repro.serve) vs full U·Vᵀ scoring.
+
+Measures, per synthetic catalog size N:
+
+  * ``serve.full.qps``  — exact dense top-N (the seed `recommend` path),
+  * ``serve.cand.qps``  — LSH retrieval + fused candidate-score kernel,
+  * ``serve.cand.recall`` — recall@topn of the candidate path against the
+    exact top-N, on a held-out probe user set.
+
+The catalog is *planted*: items and users are partitioned into preference
+groups, every item is rated by users of its own group, and factors point
+along the group direction.  This is the regime the paper's LSH bucketing
+targets (co-rated items really are neighbours), so it exercises the whole
+retrieval stack — simLSH encode → bucketed index → candidate scoring —
+without a multi-hour training run at N = 10⁵..10⁶.
+
+    PYTHONPATH=src:. python benchmarks/bench_serve.py [--sizes 10000,100000]
+        [--with-1m] [--batch 256] [--full-batches N] [--cand-batches N]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import simlsh, topk
+from repro.core.model import Params
+from repro.data.sparse import from_coo
+from repro.serve import RecsysService, ServeConfig, build_index, full_topn
+
+
+@dataclasses.dataclass(frozen=True)
+class CatalogSpec:
+    N: int                     # items
+    items_per_group: int = 50
+    users_per_group: int = 32
+    deg: int = 24              # raters per item (out of users_per_group)
+    F: int = 48                # factor dim
+    group_scale: float = 1.6   # strength of the planted group direction
+    noise: float = 0.12        # factor noise around the group direction
+    bias_std: float = 0.15
+
+
+def make_catalog(spec: CatalogSpec, seed: int = 0):
+    """Planted-group catalog → (Params, SparseMatrix, group_of_item)."""
+    rng = np.random.default_rng(seed)
+    N, F = spec.N, spec.F
+    G = max(1, N // spec.items_per_group)
+    M = G * spec.users_per_group
+    g_item = (np.arange(N) // spec.items_per_group) % G
+    g_user = np.arange(M) // spec.users_per_group
+
+    gdir = rng.normal(0, 1, (G, F))
+    gdir /= np.linalg.norm(gdir, axis=1, keepdims=True)
+    gdir *= spec.group_scale
+    U = (gdir[g_user] + spec.noise * rng.normal(0, 1, (M, F))).astype(np.float32)
+    V = (gdir[g_item] + spec.noise * rng.normal(0, 1, (N, F))).astype(np.float32)
+    bh = (spec.bias_std * rng.normal(0, 1, N)).astype(np.float32)
+
+    # each item rated by `deg` distinct users of its group
+    pick = np.argsort(rng.random((N, spec.users_per_group)), axis=1)
+    raters = (pick[:, :spec.deg] + g_item[:, None] * spec.users_per_group)
+    rows = raters.reshape(-1).astype(np.int32)
+    cols = np.repeat(np.arange(N, dtype=np.int32), spec.deg)
+    dots = np.einsum("ef,ef->e", U[rows], V[cols])
+    vals = np.clip(3.0 + 1.5 * dots, 1.0, 5.0).astype(np.float32)
+
+    params = Params(
+        U=jnp.asarray(U), V=jnp.asarray(V),
+        b=jnp.zeros((M,), jnp.float32), bh=jnp.asarray(bh),
+        W=jnp.zeros((N, 1), jnp.float32), C=jnp.zeros((N, 1), jnp.float32),
+        mu=jnp.asarray(3.0, jnp.float32))
+    sp = from_coo(rows, cols, vals, (M, N))
+    return params, sp, g_item
+
+
+def run_mode(svc: RecsysService, user_stream, batch: int) -> dict:
+    svc.warmup()
+    for users in user_stream:
+        svc.submit(users)
+    svc.flush()
+    return svc.stats()
+
+
+def recall_at(svc: RecsysService, params, probe_users, topn: int) -> float:
+    exact_s, exact_i = full_topn(params, probe_users, topn=topn)
+    svc.take_results()  # drain leftovers from the timing stream
+    svc.submit(np.asarray(probe_users))
+    svc.flush()
+    got = np.concatenate([r[2] for r in svc.take_results()])[:probe_users.shape[0]]
+    exact_i = np.asarray(exact_i)
+    hits = sum(len(set(got[u]) & set(exact_i[u])) for u in range(got.shape[0]))
+    return hits / (got.shape[0] * topn)
+
+
+def bench_size(N: int, *, batch: int, full_batches: int, cand_batches: int,
+               probe: int, topn: int, seed: int = 0, lsh=None, serve=None):
+    spec = CatalogSpec(N=N)
+    t0 = time.perf_counter()
+    params, sp, _ = make_catalog(spec, seed=seed)
+    M = params.U.shape[0]
+
+    # 16-bit band signatures: ≈1.5–2.5 random collisions per bucket at
+    # N = 10⁴..10⁵, so bucket windows stay dominated by true neighbours
+    lsh = lsh or simlsh.SimLSHConfig(G=8, p=2, q=10, band_cap=16)
+    key = jax.random.PRNGKey(seed)
+    sigs = simlsh.encode(sp, lsh, key)
+    JK = topk.topk_from_signatures(sigs, jax.random.fold_in(key, 1), K=16,
+                                   band_cap=lsh.band_cap)
+    index = build_index(sigs, tail_cap=128)
+    jax.block_until_ready(index.sorted_sigs)
+    emit(f"serve.setup.N{N}", time.perf_counter() - t0,
+         f"M={M};nnz={sp.nnz}")
+
+    cfg = serve or ServeConfig(topn=topn, micro_batch=batch, C=512,
+                               n_seeds=16, cap=8, n_popular=64, tile_b=64)
+    rng = np.random.default_rng(seed + 1)
+    stream = lambda n: [rng.integers(0, M, batch).astype(np.int32)
+                        for _ in range(n)]
+
+    full_svc = RecsysService(params, index, sp,
+                             dataclasses.replace(cfg, mode="full"), JK=JK)
+    st_full = run_mode(full_svc, stream(full_batches), batch)
+    emit(f"serve.full.qps.N{N}", 1.0 / max(st_full["qps"], 1e-9),
+         f"qps={st_full['qps']:.0f};p50_ms={st_full['p50_ms']:.1f}")
+
+    cand_svc = RecsysService(params, index, sp, cfg, JK=JK)
+    st_cand = run_mode(cand_svc, stream(cand_batches), batch)
+    emit(f"serve.cand.qps.N{N}", 1.0 / max(st_cand["qps"], 1e-9),
+         f"qps={st_cand['qps']:.0f};p50_ms={st_cand['p50_ms']:.1f}")
+
+    probe_users = jnp.asarray(rng.integers(0, M, probe), jnp.int32)
+    rec = recall_at(cand_svc, params, probe_users, topn)
+    emit(f"serve.cand.recall.N{N}", rec, f"topn={topn};probe={probe}")
+    return dict(full_qps=st_full["qps"], cand_qps=st_cand["qps"], recall=rec)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="10000,100000",
+                    help="comma-separated catalog sizes")
+    ap.add_argument("--with-1m", action="store_true",
+                    help="append a 1M-item catalog (reduced degree)")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--full-batches", type=int, default=8)
+    ap.add_argument("--cand-batches", type=int, default=16)
+    ap.add_argument("--probe", type=int, default=256)
+    ap.add_argument("--topn", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    if args.with_1m:
+        sizes.append(1_000_000)
+    out = {}
+    for N in sizes:
+        kw = {}
+        if N >= 1_000_000:
+            # 18-bit signatures: ~4 random collisions/bucket at 1M, offset
+            # by a wider candidate budget (C=768)
+            kw["lsh"] = simlsh.SimLSHConfig(G=9, p=2, q=10, band_cap=16)
+            kw["serve"] = ServeConfig(topn=args.topn, micro_batch=args.batch,
+                                      C=768, n_seeds=16, cap=8, n_popular=64,
+                                      tile_b=64)
+        out[N] = bench_size(N, batch=args.batch,
+                            full_batches=args.full_batches,
+                            cand_batches=args.cand_batches,
+                            probe=args.probe, topn=args.topn, **kw)
+    for N, r in out.items():
+        speed = r["cand_qps"] / max(r["full_qps"], 1e-9)
+        print(f"# N={N}: full {r['full_qps']:,.0f} qps | cand "
+              f"{r['cand_qps']:,.0f} qps ({speed:.1f}x) | "
+              f"recall@{args.topn} {r['recall']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -36,7 +36,7 @@ def main():
     st = online.OnlineState(
         params=res.params, S=res.S, JK=res.JK,
         sp=from_coo(tr_r[old], tr_c[old], tr_v[old], (M0, N0)),
-        M=M0, N=N0)
+        M=M0, N=N0, hash_key=res.hash_key)
 
     print(f"{int((~old).sum()):,} new interactions arrive "
           f"(new users ≥ {M0}, new items ≥ {N0})")

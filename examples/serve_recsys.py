@@ -1,27 +1,22 @@
-"""Batched recommendation serving: train LSH-MF, then serve top-N
-recommendations for request batches (the paper's online-platform setting).
+"""Recommendation serving through `repro.serve`: train LSH-MF, build the
+bucketed LSH index from the training signatures, then serve top-N requests
+with candidate-only scoring — and fold an online update (paper Alg. 4) into
+the running service without rebuilding the index.
 
     PYTHONPATH=src python examples/serve_recsys.py
 """
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import online, simlsh, topk
 from repro.core.simlsh import SimLSHConfig
 from repro.data import synthetic as syn
-from repro.data.sparse import train_test_split
+from repro.data.sparse import from_coo, train_test_split
+from repro.serve import RecsysService, ServeConfig, build_index
 from repro.train.trainer import FitConfig, fit
-
-
-@jax.jit
-def recommend(params, user_ids, topn=10):
-    """Scores = full Eq.(1) baseline+latent terms for every item."""
-    scores = (params.mu + params.b[user_ids][:, None] + params.bh[None, :]
-              + params.U[user_ids] @ params.V.T)
-    return jax.lax.top_k(scores, topn)
 
 
 def main():
@@ -29,25 +24,69 @@ def main():
                                nnz=150_000)
     rows, cols, vals, _ = syn.generate(spec, seed=0)
     tr, te = train_test_split(np.random.default_rng(0), rows, cols, vals)
-    cfg = FitConfig(F=32, K=16, epochs=6, method="simlsh",
-                    lsh=SimLSHConfig(G=8, p=1, q=10), eval_every=6)
+    lsh = SimLSHConfig(G=8, p=1, q=10)
+    cfg = FitConfig(F=32, K=16, epochs=6, method="simlsh", lsh=lsh,
+                    eval_every=6)
     res = fit(tr, te, (spec.M, spec.N), cfg, log=print)
 
+    # ---- build the serving stack from the training byproducts ----
+    sp = from_coo(*tr, (spec.M, spec.N))
+    sigs = simlsh.pack_bits(res.S >= 0)          # re-sign the Alg.4 cache
+    index = build_index(sigs, tail_cap=256)
+    scfg = ServeConfig(topn=10, micro_batch=256, C=128, n_seeds=8, cap=8,
+                       n_popular=32)
+    svc = RecsysService(res.params, index, sp, scfg, JK=res.JK).warmup()
+
+    # ---- serve a request stream ----
     rng = np.random.default_rng(1)
-    reqs = [jnp.asarray(rng.integers(0, spec.M, 256), jnp.int32)
-            for _ in range(20)]
-    # warmup + timed serving loop
-    recommend(res.params, reqs[0])
-    t0 = time.time()
-    for r in reqs:
-        scores, items = recommend(res.params, r)
-    jax.block_until_ready(items)
-    dt = time.time() - t0
-    qps = len(reqs) * 256 / dt
-    print(f"served {len(reqs)} batches × 256 users in {dt*1e3:.1f} ms "
-          f"→ {qps:,.0f} users/s")
-    print("sample recommendations for user", int(reqs[-1][0]), ":",
-          np.asarray(items[0]))
+    for _ in range(20):
+        svc.submit(rng.integers(0, spec.M, 256).astype(np.int32))
+    svc.flush()
+    st = svc.stats()
+    print(f"candidate serving: {st['users']} users in {st['batches']} "
+          f"batches → {st['qps']:,.0f} users/s (p50 {st['p50_ms']:.1f} ms)")
+
+    # exactness check vs the dense full-scoring mode on one batch
+    full = RecsysService(res.params, index, sp,
+                         dataclasses.replace(scfg, mode="full")).warmup()
+    probe = rng.integers(0, spec.M, 256).astype(np.int32)
+    svc.take_results()
+    svc.submit(probe); svc.flush()
+    full.submit(probe); full.flush()
+    got = svc.take_results()[0][2]
+    want = full.take_results()[0][2]
+    overlap = np.mean([len(set(got[u]) & set(want[u])) / got.shape[1]
+                       for u in range(probe.shape[0])])
+    print(f"recall@10 of candidate-only vs full scoring: {overlap:.3f}")
+    print(f"full-scoring baseline: {full.stats()['qps']:,.0f} users/s")
+    print("sample recommendations for user", int(probe[0]), ":", got[0])
+
+    # ---- online ingestion: new users/items arrive (paper Alg. 4) ----
+    st0 = online.OnlineState(params=res.params, S=res.S, JK=res.JK, sp=sp,
+                             M=spec.M, N=spec.N, hash_key=res.hash_key)
+    M2, N2 = spec.M + 100, spec.N + 20
+    n_new = 2000
+    nr = rng.integers(0, M2, n_new).astype(np.int32)
+    nc = rng.integers(0, N2, n_new).astype(np.int32)
+    pair = np.unique(nr.astype(np.int64) * N2 + nc)
+    # ΔΩ must be disjoint from the already-observed pairs (from_coo wants
+    # unique triples in the merged matrix)
+    seen = np.asarray(sp.rows).astype(np.int64) * N2 + np.asarray(sp.cols)
+    pair = np.setdiff1d(pair, seen, assume_unique=True)
+    nr, nc = (pair // N2).astype(np.int32), (pair % N2).astype(np.int32)
+    nv = rng.uniform(1, 5, nr.shape[0]).astype(np.float32)
+    st1 = online.online_update(
+        st0, jnp.asarray(nr), jnp.asarray(nc), jnp.asarray(nv), lsh,
+        cfg.hp, jax.random.PRNGKey(7), M_new=M2, N_new=N2, K=cfg.K, epochs=2)
+    svc.ingest_online_update(st1, N_old=spec.N)
+    print(f"ingested ΔΩ: catalog {spec.N} → {svc.index.n_items} items "
+          f"(tail occupancy {int(svc.index.tail_len)}/{svc.index.tail_cap})")
+
+    svc.submit(rng.integers(0, M2, 256).astype(np.int32))
+    svc.flush()
+    items = svc.take_results()[-1][2]
+    new_hits = int(((items >= spec.N) & (items != topk.SENTINEL)).sum())
+    print(f"post-ingest serving OK; new items in recommendations: {new_hits}")
 
 
 if __name__ == "__main__":

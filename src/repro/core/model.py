@@ -67,12 +67,16 @@ def init_from_data(key, sp: SparseMatrix, F, K) -> Params:
 
 
 def assemble(sp: SparseMatrix, JK: jax.Array, idx: jax.Array,
-             valid: jax.Array) -> Batch:
+             valid: jax.Array, lookup_sp: SparseMatrix | None = None) -> Batch:
     """Gather everything a training batch needs (rating lookups via the
-    sorted-key binary search — the TPU answer to the GPU hash probe)."""
+    sorted-key binary search — the TPU answer to the GPU hash probe).
+
+    ``idx`` indexes ``sp``'s triples; neighbour-rating lookups go against
+    ``lookup_sp`` when given (Alg. 4 online: sample ΔΩ, look up in Ω̂)."""
     i, j, r = sp.rows[idx], sp.cols[idx], sp.vals[idx]
     nb = JK[j]                                              # [B, K]
-    rnb, hit = lookup(sp, jnp.broadcast_to(i[:, None], nb.shape), nb)
+    src = sp if lookup_sp is None else lookup_sp
+    rnb, hit = lookup(src, jnp.broadcast_to(i[:, None], nb.shape), nb)
     expl = hit.astype(jnp.float32)
     impl = 1.0 - expl
     return Batch(i, j, r, nb, rnb, expl, impl, valid.astype(jnp.float32))

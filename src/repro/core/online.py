@@ -33,6 +33,10 @@ class OnlineState:
     sp: SparseMatrix      # all interactions seen so far
     M: int
     N: int
+    # the PRNG key the accumulators were *encoded* with — ΔΩ contributions
+    # must come from the same Φ hash family or incremental signatures are
+    # meaningless (new items would land in random buckets)
+    hash_key: jax.Array | None = None
 
 
 def grow_params(p: Params, M_new: int, N_new: int, key) -> Params:
@@ -74,11 +78,16 @@ def online_update(st: OnlineState, new_rows, new_cols, new_vals,
                   M_new: int, N_new: int, K: int, epochs: int = 3,
                   batch: int = 4096) -> OnlineState:
     """Alg. 4 end-to-end.  ``new_*`` are ΔΩ triples in the grown id space."""
-    k_hash, k_grow, k_topk, k_train = jax.random.split(key, 4)
+    if st.hash_key is None:
+        raise ValueError(
+            "OnlineState.hash_key is unset — pass the key the accumulators "
+            "were encoded with (FitResult.hash_key), else ΔΩ is hashed with "
+            "a different Φ family and incremental signatures are garbage")
+    k_grow, k_topk, k_train = jax.random.split(key, 3)
 
-    # (1)(2) incremental hashing + re-sign — lines 1–6
+    # (1)(2) incremental hashing + re-sign — lines 1–6 (same Φ family!)
     S2, sigs = simlsh.update_accumulators(
-        st.S, new_rows, new_cols, new_vals, cfg, k_hash, N_new)
+        st.S, new_rows, new_cols, new_vals, cfg, st.hash_key, N_new)
 
     # merged interaction matrix (new triples appended)
     sp_all = from_coo(
@@ -102,9 +111,13 @@ def online_update(st: OnlineState, new_rows, new_cols, new_vals,
 
         def body(pp, ib):
             bidx, bvalid = ib
-            bt = assemble(sp_all, JK, bidx, bvalid)
+            # bidx indexes ΔΩ's own triples — indexing sp_all here would
+            # train on whatever sorts first in the merged matrix instead of
+            # the new interactions; neighbour ratings still come from Ω̂
+            bt = assemble(delta, JK, bidx, bvalid, lookup_sp=sp_all)
             return masked_culsh_step(pp, bt, hp, decay, st.M, st.N), None
 
         p, _ = jax.lax.scan(body, p, (idx, valid))
 
-    return OnlineState(params=p, S=S2, JK=JK, sp=sp_all, M=M_new, N=N_new)
+    return OnlineState(params=p, S=S2, JK=JK, sp=sp_all, M=M_new, N=N_new,
+                       hash_key=st.hash_key)

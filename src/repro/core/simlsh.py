@@ -82,9 +82,10 @@ def band_accumulate(sp_rows, sp_cols, sp_vals, key, band, *, N, bits, psi_pow,
 
 def encode(sp: SparseMatrix, cfg: SimLSHConfig, key: jax.Array,
            return_accumulators: bool = False):
-    """All q band signatures.  Returns sigs [q, N] int64 (and accumulators
-
-    [q, N, p·G] float32 when requested — the Alg. 4 online cache)."""
+    """All q band signatures.  Returns sigs [q, N] int32 (`pack_bits` packs
+    into int32, which is why `__post_init__` enforces p·G ≤ 30) and, when
+    requested, the accumulators [q, N, p·G] float32 — the Alg. 4 online
+    cache."""
 
     def one_band(band):
         S = band_accumulate(sp.rows, sp.cols, sp.vals, key, band,

@@ -24,7 +24,7 @@ SENTINEL = jnp.iinfo(jnp.int32).max
 
 @partial(jax.jit, static_argnames=("band_cap",))
 def band_candidates(sig: jax.Array, *, band_cap: int) -> jax.Array:
-    """One band's candidates.  sig [N] int64 → cand [N, band_cap] int32.
+    """One band's candidates.  sig [N] int32 → cand [N, band_cap] int32.
 
     cand entries are item ids sharing this band's signature, SENTINEL-padded.
     """
@@ -81,7 +81,12 @@ def topk_frequent(cands: jax.Array, key: jax.Array, *, K: int) -> jax.Array:
 
 def topk_from_signatures(sigs: jax.Array, key: jax.Array, *, K: int,
                          band_cap: int) -> jax.Array:
-    """sigs [q, N] → J^K [N, K] int32 (the paper's Top-K matrix)."""
+    """sigs [q, N] int32 → J^K [N, K] int32 (the paper's Top-K matrix).
+
+    Signatures are int32 by construction (`simlsh.pack_bits`; p·G ≤ 30) —
+    int64 would silently widen every sort/compare on x64-enabled hosts.
+    """
+    assert sigs.dtype == jnp.int32, f"signatures must be int32, got {sigs.dtype}"
     cands = jax.vmap(lambda s: band_candidates(s, band_cap=band_cap))(sigs)
     cands = jnp.transpose(cands, (1, 0, 2)).reshape(sigs.shape[1], -1)
     return topk_frequent(cands, key, K=K)

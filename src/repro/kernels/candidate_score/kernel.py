@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused candidate scoring + top-N (serving hot path).
+
+For a tile of users, one VMEM pass computes the Eq. (1) baseline+latent
+serving score against each user's C retrieved candidates
+
+    s[b, c] = (μ + b_i[b]) + b̂[b, c] + u[b]·v[b, c]
+
+masks the SENTINEL padding, and selects the per-user top-N *inside the
+kernel* — the [TB, C] score matrix never round-trips to HBM, only the
+[TB, topn] result does.  The contraction u·v over candidates is a batched
+[1, F] × [F, C] matvec — MXU-shaped, like `simlsh_encode`.
+
+Top-N is a static-depth iterative argmax (select max, knock it out with
+-BIG, repeat).  Ties resolve to the lowest candidate slot via a min-over-
+equal-scores reduction — the same first-index rule `jax.lax.top_k` uses,
+which keeps the ref path bit-comparable.  (`topn` is 10-ish; topn·C
+compares per user are noise next to the F·C MACs.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# python floats (not jnp scalars): they must enter the kernel as literals,
+# pallas_call rejects captured traced constants
+NEG = -3e38     # effective -inf that survives f32 arithmetic
+_NEG2 = -3.4e38  # knock-out value, strictly below NEG so already-selected
+                 # (incl. masked) slots never repeat
+
+
+def _score_kernel(u_ref, bu_ref, vc_ref, bc_ref, mask_ref,
+                  score_out, idx_out, *, topn: int):
+    u = u_ref[...]                     # [TB, F]
+    bu = bu_ref[...]                   # [TB]
+    vc = vc_ref[...]                   # [TB, C, F]
+    bc = bc_ref[...]                   # [TB, C]
+    mask = mask_ref[...]               # [TB, C]  (1.0 valid)
+
+    s = jnp.einsum("bf,bcf->bc", u, vc,
+                   preferred_element_type=jnp.float32)
+    s = s + bc + bu[:, None]
+    s = jnp.where(mask > 0, s, NEG)
+
+    TB, C = s.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (TB, C), 1)
+    big = jnp.int32(C)
+    for t in range(topn):              # static unroll
+        m = jnp.max(s, axis=1)                                  # [TB]
+        at = jnp.min(jnp.where(s == m[:, None], col, big), axis=1)
+        score_out[:, t] = m
+        idx_out[:, t] = at
+        s = jnp.where(col == at[:, None], _NEG2, s)
+
+
+@functools.partial(jax.jit, static_argnames=("topn", "tile_b", "interpret"))
+def candidate_score_topn(u, bu, vc, bc, mask, *, topn: int,
+                         tile_b: int = 8, interpret: bool = True):
+    """u [B,F]; bu [B]; vc [B,C,F]; bc,mask [B,C] →
+    (scores [B,topn] f32, idx [B,topn] int32 slots into C).
+
+    Masked slots (and padded rows) surface as NEG scores in candidate-slot
+    order, exactly like the ref's `top_k` over the masked matrix — callers
+    translate idx through their candidate id table and mask on score > NEG.
+    """
+    assert vc.shape[1] >= topn, "need at least topn candidate slots"
+    B, C, F = vc.shape
+    pad = (-B) % tile_b
+    if pad:
+        u = jnp.pad(u, ((0, pad), (0, 0)))
+        bu = jnp.pad(bu, (0, pad))
+        vc = jnp.pad(vc, ((0, pad), (0, 0), (0, 0)))
+        bc = jnp.pad(bc, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    Bp = u.shape[0]
+
+    mat = pl.BlockSpec((tile_b, F), lambda i: (i, 0))
+    vec = pl.BlockSpec((tile_b,), lambda i: (i,))
+    cmat = pl.BlockSpec((tile_b, C), lambda i: (i, 0))
+    cube = pl.BlockSpec((tile_b, C, F), lambda i: (i, 0, 0))
+    tmat = pl.BlockSpec((tile_b, topn), lambda i: (i, 0))
+    scores, idx = pl.pallas_call(
+        functools.partial(_score_kernel, topn=topn),
+        grid=(Bp // tile_b,),
+        in_specs=[mat, vec, cube, cmat, cmat],
+        out_specs=[tmat, tmat],
+        out_shape=[jax.ShapeDtypeStruct((Bp, topn), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, topn), jnp.int32)],
+        interpret=interpret,
+    )(u, bu, vc, bc, mask)
+    return scores[:B], idx[:B]

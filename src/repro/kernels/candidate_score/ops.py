@@ -1,0 +1,42 @@
+"""jit'd wrapper: gather user/candidate factors → fused score+top-N kernel.
+
+The [B, C, F] candidate-factor gather happens here (XLA gather from the full
+V), so the kernel only ever sees dense VMEM tiles; the returned top-N slots
+are translated back to global item ids, SENTINEL where a slot was padding.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk import SENTINEL
+from repro.kernels.candidate_score.kernel import NEG, candidate_score_topn
+from repro.kernels.candidate_score.ref import candidate_score_topn_ref
+
+
+@partial(jax.jit, static_argnames=("topn", "tile_b", "interpret", "impl"))
+def score_candidates(params, user_ids: jax.Array, cand: jax.Array, *,
+                     topn: int, tile_b: int = 8, interpret: bool = True,
+                     impl: str = "pallas"):
+    """params (core.model.Params), user_ids [B], cand [B, C] SENTINEL-padded
+    → (scores [B, topn], items [B, topn] int32, SENTINEL where deficient).
+
+    ``impl='ref'`` runs the pure-jnp oracle instead of the Pallas kernel —
+    the fast path on CPU, where Pallas only has the (slow) interpreter.
+    """
+    safe = jnp.clip(cand, 0, params.V.shape[0] - 1)
+    mask = (cand != SENTINEL).astype(jnp.float32)
+    u = params.U[user_ids]
+    bu = params.mu + params.b[user_ids]
+    vc = params.V[safe]                       # [B, C, F]
+    bc = params.bh[safe]
+    if impl == "ref":
+        scores, idx = candidate_score_topn_ref(u, bu, vc, bc, mask, topn=topn)
+    else:
+        scores, idx = candidate_score_topn(u, bu, vc, bc, mask, topn=topn,
+                                           tile_b=tile_b, interpret=interpret)
+    items = jnp.take_along_axis(cand, idx, axis=1)
+    items = jnp.where(scores > NEG, items, SENTINEL)
+    return scores, items

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused candidate-score + top-N kernel."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.candidate_score.kernel import NEG
+
+
+def candidate_score_topn_ref(u, bu, vc, bc, mask, *, topn: int):
+    s = jnp.einsum("bf,bcf->bc", u, vc) + bc + bu[:, None]
+    s = jnp.where(mask > 0, s, NEG)
+    scores, idx = jax.lax.top_k(s, topn)
+    return scores, idx.astype(jnp.int32)

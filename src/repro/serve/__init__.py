@@ -1,0 +1,20 @@
+"""repro.serve — LSH retrieval + serving subsystem.
+
+Turns the training-side simLSH signatures into a production retrieval
+stack: persistent bucketed index (`index`), batched candidate retrieval
+(`retrieve`), and a micro-batching serving loop with candidate-only
+scoring through the fused Pallas kernel (`service`).
+"""
+from repro.serve.index import (LSHIndex, build_index, insert, lookup_items,
+                               lookup_signatures, needs_rebuild, rebuild)
+from repro.serve.retrieve import (dedup_candidates, retrieve_for_items,
+                                  retrieve_for_users, seed_items)
+from repro.serve.service import (RecsysService, ServeConfig, full_topn,
+                                 popular_shortlist)
+
+__all__ = [
+    "LSHIndex", "build_index", "insert", "lookup_items", "lookup_signatures",
+    "needs_rebuild", "rebuild", "dedup_candidates", "retrieve_for_items",
+    "retrieve_for_users", "seed_items", "RecsysService", "ServeConfig",
+    "full_topn", "popular_shortlist",
+]

@@ -1,0 +1,258 @@
+"""Bucketed LSH index — the serving-side image of the paper's hash table.
+
+`core/topk.py` finds bucket-mates with a *per-call* argsort of every band's
+signatures — fine for one-shot Top-K construction, but serving needs a
+persistent structure that is built once and probed millions of times.  This
+module stores each band's signatures in sorted order with CSR-style bucket
+offsets, so a probe is a binary search (or an O(1) slot lookup for items the
+index already contains) instead of an O(N log N) sort.
+
+Layout per band b (all fixed-shape, jit-friendly, int32):
+
+  sorted_sigs[b]  [N]  band signatures ascending      ┐ the "CSR" arrays:
+  sorted_ids[b]   [N]  item id occupying each slot    │ a bucket is the
+  bucket_lo[b]    [N]  first slot of the slot's bucket│ contiguous slot range
+  bucket_hi[b]    [N]  one-past-last slot of bucket   ┘ [lo, hi)
+  slot_of[b]      [N]  item id → its slot (inverse permutation)
+
+Online ingestion (paper Alg. 4): new items are appended to a small *tail*
+buffer that probes scan linearly; when the tail fills up the index is rebuilt
+from the full signature set.  This is the classic main+delta ANN design — the
+sorted core stays immutable (warm jit caches, no re-sort per insert) and the
+tail bounds the extra probe cost.
+
+All candidate outputs are SENTINEL-padded (same convention as `core/topk.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk import SENTINEL
+
+# tail slots that hold no item: their signature must never match a probe.
+# Signatures are packed into ≤30 bits (simlsh.SimLSHConfig.__post_init__),
+# so int32 min is unreachable as a real signature.
+_EMPTY_SIG = jnp.iinfo(jnp.int32).min
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LSHIndex:
+    sorted_sigs: jax.Array   # [q, N] int32
+    sorted_ids: jax.Array    # [q, N] int32
+    bucket_lo: jax.Array     # [q, N] int32
+    bucket_hi: jax.Array     # [q, N] int32
+    slot_of: jax.Array       # [q, N] int32
+    tail_sigs: jax.Array     # [q, T] int32 (_EMPTY_SIG where unused)
+    tail_ids: jax.Array      # [T] int32 (SENTINEL where unused)
+    tail_len: jax.Array      # [] int32
+    n_base: int = dataclasses.field(metadata=dict(static=True))
+    tail_cap: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def q(self) -> int:
+        return self.sorted_sigs.shape[0]
+
+    @property
+    def n_items(self) -> int:
+        """Total items the index can answer for (base + current tail)."""
+        return self.n_base + int(self.tail_len)
+
+
+@partial(jax.jit, static_argnames=("tail_cap",))
+def _build(sigs: jax.Array, tail_cap: int) -> LSHIndex:
+    q, N = sigs.shape
+
+    def one_band(sig):
+        order = jnp.argsort(sig).astype(jnp.int32)
+        ssig = sig[order]
+        slot_of = jnp.zeros((N,), jnp.int32).at[order].set(
+            jnp.arange(N, dtype=jnp.int32))
+        lo = jnp.searchsorted(ssig, ssig, side="left").astype(jnp.int32)
+        hi = jnp.searchsorted(ssig, ssig, side="right").astype(jnp.int32)
+        return ssig, order, lo, hi, slot_of
+
+    ssig, order, lo, hi, slot_of = jax.vmap(one_band)(sigs)
+    return LSHIndex(
+        sorted_sigs=ssig, sorted_ids=order, bucket_lo=lo, bucket_hi=hi,
+        slot_of=slot_of,
+        tail_sigs=jnp.full((q, tail_cap), _EMPTY_SIG, jnp.int32),
+        tail_ids=jnp.full((tail_cap,), SENTINEL, jnp.int32),
+        tail_len=jnp.asarray(0, jnp.int32),
+        n_base=N, tail_cap=tail_cap)
+
+
+def build_index(sigs: jax.Array, *, tail_cap: int = 1024) -> LSHIndex:
+    """sigs [q, N] int32 (from `core.simlsh.encode`) → persistent index.
+
+    Item ids are the column positions 0..N-1 — the same id space as the
+    factor matrix V, so lookups compose directly with scoring.
+    """
+    assert sigs.dtype == jnp.int32, f"signatures must be int32, got {sigs.dtype}"
+    return _build(sigs, tail_cap=tail_cap)
+
+
+def insert(index: LSHIndex, new_sigs: jax.Array, new_ids: jax.Array) -> LSHIndex:
+    """Append new items (Alg. 4 online ingestion) to the tail buffer.
+
+    ``new_sigs`` [q, n] are the re-signed signatures of the *new* columns
+    (from `simlsh.update_accumulators`); ``new_ids`` [n] their global ids.
+    Raises if the tail would overflow — callers should then `rebuild` with
+    the full signature set (see `needs_rebuild`).
+    """
+    n = int(new_ids.shape[0])
+    tl = int(index.tail_len)
+    if tl + n > index.tail_cap:
+        raise ValueError(
+            f"tail overflow ({tl}+{n} > {index.tail_cap}): rebuild the index")
+    tail_sigs = jax.lax.dynamic_update_slice(
+        index.tail_sigs, jnp.asarray(new_sigs, jnp.int32), (0, tl))
+    tail_ids = jax.lax.dynamic_update_slice(
+        index.tail_ids, jnp.asarray(new_ids, jnp.int32), (tl,))
+    return dataclasses.replace(
+        index, tail_sigs=tail_sigs, tail_ids=tail_ids,
+        tail_len=jnp.asarray(tl + n, jnp.int32))
+
+
+def needs_rebuild(index: LSHIndex, incoming: int = 0) -> bool:
+    return int(index.tail_len) + incoming > index.tail_cap
+
+
+def rebuild(index: LSHIndex, sigs: jax.Array) -> LSHIndex:
+    """Fold the tail back into the sorted core from the full [q, N'] sigs."""
+    return build_index(sigs, tail_cap=index.tail_cap)
+
+
+def _sig_of_items(index: LSHIndex, ids: jax.Array) -> jax.Array:
+    """Band signatures for item ids that live in the index.  ids [...] →
+    [q, ...]; unknown/SENTINEL ids get _EMPTY_SIG (match nothing)."""
+    in_base = (ids >= 0) & (ids < index.n_base)
+    safe = jnp.clip(ids, 0, index.n_base - 1)
+    base_sig = index.sorted_sigs[
+        jnp.arange(index.q)[:, None], index.slot_of[:, safe.reshape(-1)]
+    ].reshape((index.q,) + ids.shape)
+
+    # tail path: linear match over the (small) tail buffer
+    tmatch = index.tail_ids[None, :] == ids.reshape(-1)[:, None]   # [Q, T]
+    tslot = jnp.argmax(tmatch, axis=1)                             # [Q]
+    thit = jnp.any(tmatch, axis=1)
+    tail_sig = index.tail_sigs[:, tslot].reshape((index.q,) + ids.shape)
+    thit = thit.reshape(ids.shape)
+
+    sig = jnp.where(in_base, base_sig,
+                    jnp.where(thit, tail_sig, _EMPTY_SIG))
+    return sig
+
+
+@partial(jax.jit, static_argnames=("cap", "n_probe"))
+def lookup_signatures(index: LSHIndex, qsigs: jax.Array, *,
+                      cap: int, n_probe: int = 1) -> jax.Array:
+    """Probe with explicit band signatures.  qsigs [B, q] → cand [B, L] int32
+    with L = q·n_probe·cap + q·cap (tail), SENTINEL-padded.
+
+    Multi-probe: probe t ∈ [0, n_probe) XORs bit (t−1) into the query
+    signature (probe 0 is the exact bucket) — the standard single-bit-flip
+    probe sequence that trades a few extra binary searches for recall.
+    """
+    B, q = qsigs.shape
+    probe_masks = jnp.asarray(
+        [0] + [1 << t for t in range(n_probe - 1)], jnp.int32)    # [n_probe]
+
+    def one_band(ssig, sids, qsig):
+        # qsig [B] → probed [B, n_probe]
+        probed = qsig[:, None] ^ probe_masks[None, :]
+        lo = jnp.searchsorted(ssig, probed.reshape(-1)).astype(jnp.int32)
+        pos = lo[:, None] + jnp.arange(cap, dtype=jnp.int32)      # [B·P, cap]
+        ok = pos < ssig.shape[0]
+        pos = jnp.clip(pos, 0, ssig.shape[0] - 1)
+        ok &= ssig[pos] == probed.reshape(-1)[:, None]
+        out = jnp.where(ok, sids[pos], SENTINEL)
+        return out.reshape(B, n_probe * cap)
+
+    core = jax.vmap(one_band)(index.sorted_sigs, index.sorted_ids,
+                              qsigs.T)                            # [q, B, P·cap]
+    core = jnp.transpose(core, (1, 0, 2)).reshape(B, -1)
+
+    def one_band_tail(tsig, qsig):
+        return _tail_matches(index, tsig, qsig, width=cap)
+
+    tail = jax.vmap(one_band_tail)(index.tail_sigs, qsigs.T)      # [q, B, cap]
+    tail = jnp.transpose(tail, (1, 0, 2)).reshape(B, -1)
+    return jnp.concatenate([core, tail], axis=1)
+
+
+def _tail_matches(index: LSHIndex, tsig: jax.Array, qsig: jax.Array, *,
+                  width: int) -> jax.Array:
+    """Up to ``width`` tail ids whose band signature equals qsig.  [B] →
+    [B, width].  Sort-compaction (match positions first) — `top_k` is far
+    slower than sort on both CPU and TPU for these shapes."""
+    T = tsig.shape[0]
+    match = tsig[None, :] == qsig[:, None]                        # [B, T]
+    key = jnp.where(match, jnp.arange(T, dtype=jnp.int32), T)
+    key = jnp.sort(key, axis=1)[:, :min(width, T)]
+    ids = index.tail_ids[jnp.clip(key, 0, T - 1)]
+    return jnp.where(key < T, ids, SENTINEL)
+
+
+@partial(jax.jit, static_argnames=("cap", "include_tail"))
+def lookup_items(index: LSHIndex, item_ids: jax.Array, *, cap: int,
+                 include_tail: bool = True) -> jax.Array:
+    """Bucket-mates of items already in the index.  item_ids [B] →
+    cand [B, q·cap (+ q·cap tail)] int32, SENTINEL-padded (includes the item
+    itself).  ``include_tail=False`` skips the tail scan — callers that batch
+    many queries per user (see `retrieve.retrieve_for_users`) scan the tail
+    once per user instead.
+
+    For base items the bucket is addressed by the precomputed slot (no
+    binary search); the window is centred on the item's own slot so huge
+    buckets spread their mates instead of always returning the bucket head —
+    the same windowing `topk.band_candidates` applies.
+    """
+    B = item_ids.shape[0]
+    valid_q = item_ids != SENTINEL
+    in_base = valid_q & (item_ids >= 0) & (item_ids < index.n_base)
+    safe = jnp.clip(item_ids, 0, index.n_base - 1)
+
+    def one_band(ssig, sids, lo_a, hi_a, slot_of):
+        slot = slot_of[safe]                                      # [B]
+        lo, hi = lo_a[slot], hi_a[slot]
+        start = jnp.clip(slot - cap // 2, lo, jnp.maximum(hi - cap, lo))
+        pos = start[:, None] + jnp.arange(cap, dtype=jnp.int32)   # [B, cap]
+        ok = in_base[:, None] & (pos < hi[:, None])
+        pos = jnp.clip(pos, 0, ssig.shape[0] - 1)
+        return jnp.where(ok, sids[pos], SENTINEL)
+
+    core = jax.vmap(one_band)(index.sorted_sigs, index.sorted_ids,
+                              index.bucket_lo, index.bucket_hi,
+                              index.slot_of)                      # [q, B, cap]
+
+    qsigs = _sig_of_items(index, item_ids)                        # [q, B]
+
+    # tail-resident query items have no slot — find their base bucket by
+    # binary search on the signature instead
+    def one_band_sig(ssig, sids, qsig):
+        lo = jnp.searchsorted(ssig, qsig).astype(jnp.int32)
+        pos = lo[:, None] + jnp.arange(cap, dtype=jnp.int32)      # [B, cap]
+        ok = pos < ssig.shape[0]
+        pos = jnp.clip(pos, 0, ssig.shape[0] - 1)
+        ok &= ssig[pos] == qsig[:, None]
+        return jnp.where(ok, sids[pos], SENTINEL)
+
+    by_sig = jax.vmap(one_band_sig)(index.sorted_sigs, index.sorted_ids,
+                                    qsigs)                        # [q, B, cap]
+    core = jnp.where(in_base[None, :, None], core, by_sig)
+    core = jnp.transpose(core, (1, 0, 2)).reshape(B, -1)
+    if not include_tail:
+        return core
+
+    # tail members that share any band signature with the query item
+    def one_band_tail(tsig, qsig):
+        return _tail_matches(index, tsig, qsig, width=cap)
+
+    tail = jax.vmap(one_band_tail)(index.tail_sigs, qsigs)        # [q, B, cap]
+    tail = jnp.transpose(tail, (1, 0, 2)).reshape(B, -1)
+    return jnp.concatenate([core, tail], axis=1)

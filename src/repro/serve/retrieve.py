@@ -1,0 +1,133 @@
+"""Batched candidate retrieval — the ANN stage of the serving pipeline.
+
+For a batch of users the candidate set is the union of
+  * bucket-mates (across all bands, `index.lookup_items`) of the user's
+    *seed items* — their highest-rated observed items, the serving analogue
+    of the paper's "items similar under simLSH to what i liked";
+  * the seeds themselves and their precomputed Top-K neighbour lists J^K
+    (when provided) — the training-side neighbourhoods reused at serving;
+  * tail items (online inserts not yet folded into the sorted core) that
+    collide with any seed in any band;
+  * a global popularity shortlist (items with the highest baseline b̂_j),
+    which covers the bias-dominated part of Eq. (1) that no similarity
+    structure can retrieve — it gets *reserved* slots, so it can never be
+    crowded out.
+
+Everything is fixed-shape: the union is deduplicated into a [B, C] int32
+tensor, SENTINEL-padded, ready for the `candidate_score` kernel.  Dedup is
+sort → neighbour-compare → sort (compaction); `lax.top_k` is deliberately
+avoided — it is several times slower than a second sort at these shapes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk import SENTINEL
+from repro.data.sparse import SparseMatrix
+from repro.serve.index import LSHIndex, _sig_of_items, lookup_items
+
+# invertible 30-bit multiplicative hash (2654435761·x mod 2³⁰); item ids
+# must stay below 2³⁰ — comfortably above any catalog this serves
+_MASK30 = jnp.int32(0x3FFFFFFF)
+
+
+@partial(jax.jit, static_argnames=("n_seeds", "window"))
+def seed_items(sp: SparseMatrix, user_ids: jax.Array, *, n_seeds: int,
+               window: int = 64) -> jax.Array:
+    """Top-rated observed items per user.  [B] → seeds [B, n_seeds], SENTINEL-
+    padded for users with fewer than n_seeds ratings.
+
+    Users' entries are a contiguous run of the row-sorted COO arrays; we
+    scan a fixed ``window`` of it (zipf rows longer than the window
+    contribute their first `window` ratings — a bounded-cost approximation).
+    """
+    start = jnp.searchsorted(sp.rows, user_ids, side="left").astype(jnp.int32)
+    end = jnp.searchsorted(sp.rows, user_ids, side="right").astype(jnp.int32)
+    pos = start[:, None] + jnp.arange(window, dtype=jnp.int32)     # [B, W]
+    ok = pos < end[:, None]
+    pos = jnp.clip(pos, 0, sp.rows.shape[0] - 1)
+    vals = jnp.where(ok, sp.vals[pos], -jnp.inf)
+    items = jnp.where(ok, sp.cols[pos], SENTINEL)
+    top, idx = jax.lax.top_k(vals, min(n_seeds, window))
+    seeds = jnp.take_along_axis(items, idx, axis=1)
+    return jnp.where(jnp.isfinite(top), seeds, SENTINEL)
+
+
+@partial(jax.jit, static_argnames=("C",))
+def dedup_candidates(cands: jax.Array, *, C: int,
+                     exclude_sorted: jax.Array | None = None) -> jax.Array:
+    """[B, L] SENTINEL-padded id lists → [B, C] unique ids, SENTINEL-padded.
+
+    Ids in ``exclude_sorted`` (ascending) are dropped — used to keep the
+    reserved popularity slots duplicate-free.  When a row has more than C
+    unique candidates the overflow is truncated in *hashed*-id order, so no
+    id range is systematically evicted (ascending-id truncation would always
+    drop the newest — highest-id — items first).  Callers size C above the
+    typical unique count, so truncation is the overflow case, not the norm.
+    """
+    B, L = cands.shape
+    if exclude_sorted is not None:
+        p = jnp.clip(jnp.searchsorted(exclude_sorted, cands), 0,
+                     exclude_sorted.shape[0] - 1)
+        cands = jnp.where(exclude_sorted[p] == cands, SENTINEL, cands)
+    c = jnp.sort(cands, axis=1)
+    prev = jnp.concatenate([jnp.full((B, 1), -1, c.dtype), c[:, :-1]], axis=1)
+    uniq = (c != prev) & (c != SENTINEL)
+    # compact uniques to the left in *hashed*-id order: h is an invertible
+    # multiplicative hash mod 2³⁰ (odd multiplier), so a plain int32 sort of
+    # h — far cheaper than argsort/pair-sort on CPU and TPU — gives an
+    # unbiased truncation order, padding (SENTINEL > 2³⁰) still sorts last,
+    # and the ids are recovered exactly by the modular inverse.
+    h = jnp.where(uniq, (c * jnp.int32(-1640531535)) & _MASK30, SENTINEL)
+    h = jnp.sort(h, axis=1)[:, :min(C, L)]
+    out = jnp.where(h == SENTINEL, SENTINEL,
+                    (h * jnp.int32(244002641)) & _MASK30)
+    if C > L:
+        out = jnp.pad(out, ((0, 0), (0, C - L)), constant_values=SENTINEL)
+    return out
+
+
+@partial(jax.jit, static_argnames=("n_seeds", "cap", "C", "window"))
+def retrieve_for_users(index: LSHIndex, sp: SparseMatrix, user_ids: jax.Array,
+                       *, n_seeds: int, cap: int, C: int,
+                       JK: jax.Array | None = None,
+                       popular: jax.Array | None = None,
+                       window: int = 64) -> jax.Array:
+    """user_ids [B] → candidate item ids [B, C] int32, SENTINEL-padded."""
+    B = user_ids.shape[0]
+    seeds = seed_items(sp, user_ids, n_seeds=n_seeds, window=window)  # [B, S]
+
+    mates = lookup_items(index, seeds.reshape(-1), cap=cap,
+                         include_tail=False)
+    pools = [mates.reshape(B, -1), seeds]
+    if JK is not None:
+        safe = jnp.clip(seeds, 0, JK.shape[0] - 1)
+        nb = jnp.where((seeds != SENTINEL)[:, :, None], JK[safe], SENTINEL)
+        pools.append(nb.reshape(B, -1))
+    if index.tail_cap:
+        # one tail scan per *user*: tail items colliding with any seed/band
+        qsigs = _sig_of_items(index, seeds)                   # [q, B, S]
+        hit = jnp.any(qsigs[..., None] == index.tail_sigs[:, None, None, :],
+                      axis=(0, 2))                            # [B, T]
+        pools.append(jnp.where(hit, index.tail_ids[None, :], SENTINEL))
+
+    pool = jnp.concatenate(pools, axis=1)
+    if popular is None:
+        return dedup_candidates(pool, C=C)
+    # popularity shortlist gets reserved slots at the end of the row
+    P = popular.shape[0]
+    assert C > P, f"candidate budget C={C} must exceed the shortlist P={P}"
+    core = dedup_candidates(pool, C=C - P, exclude_sorted=jnp.sort(popular))
+    return jnp.concatenate(
+        [core, jnp.broadcast_to(popular[None, :], (B, P))], axis=1)
+
+
+@partial(jax.jit, static_argnames=("cap", "C"))
+def retrieve_for_items(index: LSHIndex, item_ids: jax.Array, *, cap: int,
+                       C: int) -> jax.Array:
+    """Item-to-item retrieval (related-items widgets): [B] → [B, C]."""
+    mates = lookup_items(index, item_ids, cap=cap)
+    return dedup_candidates(mates, C=C)

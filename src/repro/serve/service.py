@@ -1,0 +1,221 @@
+"""Request-batching serving loop: retrieval → candidate scoring → top-N.
+
+A `RecsysService` owns the trained parameters, the persistent `LSHIndex`,
+and two jitted serving pipelines:
+
+  * ``candidate`` — `retrieve.retrieve_for_users` (ANN candidates) feeding
+    the fused `kernels/candidate_score` Pallas kernel: O(C) work per user.
+  * ``full``      — exact `μ + b_i + b̂ + U V^T` top-N: O(N) work per user,
+    kept as the exactness baseline (and for recall measurement).
+
+Requests are micro-batched: `submit` accumulates user ids and flushes a
+fixed-shape batch whenever ``micro_batch`` are pending (padding keeps every
+flush the same shape, so the jit cache stays warm after the first call).
+QPS / latency percentiles are tracked per flush.
+
+Online ingestion (paper Alg. 4): `ingest_online_update` re-signs the
+accumulator cache from `core.online.online_update` and *inserts* the new
+columns into the index tail — no rebuild, no cold jit caches — falling back
+to a rebuild only when the tail overflows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simlsh
+from repro.core.model import Params
+from repro.core.topk import SENTINEL
+from repro.data.sparse import SparseMatrix
+from repro.kernels.candidate_score.ops import score_candidates
+from repro.serve import index as lsh_index
+from repro.serve.retrieve import retrieve_for_users
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    mode: str = "candidate"   # candidate | full
+    topn: int = 10
+    micro_batch: int = 256
+    # retrieval knobs
+    C: int = 512              # candidate slots per user
+    n_seeds: int = 8          # seed items per user
+    cap: int = 8              # bucket-mates taken per band per seed
+    n_popular: int = 64       # global popularity shortlist size (0 = off)
+    seed_window: int = 64
+    use_jk: bool = True       # include seeds' training Top-K lists
+    # kernel knobs
+    tile_b: int = 8
+    interpret: bool | None = None  # None = auto (interpret only on CPU);
+                                   # never leave True on TPU — it would run
+                                   # the hot path in the Pallas interpreter
+    impl: str = "auto"        # auto | pallas | ref — 'auto' picks the pure-
+                              # XLA ref on CPU (Pallas only interprets there)
+                              # and the fused kernel elsewhere
+
+    def scorer_impl(self) -> str:
+        if self.impl != "auto":
+            return self.impl
+        return "ref" if jax.default_backend() == "cpu" else "pallas"
+
+    def interpret_mode(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("topn",))
+def full_topn(params: Params, user_ids: jax.Array, *, topn: int):
+    """Exact dense scoring — every item, every user.  The O(N) baseline."""
+    scores = (params.mu + params.b[user_ids][:, None] + params.bh[None, :]
+              + params.U[user_ids] @ params.V.T)
+    return jax.lax.top_k(scores, topn)
+
+
+def popular_shortlist(params: Params, n: int) -> jax.Array:
+    """Items with the highest baseline offset b̂_j — the candidates the bias
+    part of Eq. (1) can rank high regardless of the user's neighbourhood."""
+    _, ids = jax.lax.top_k(params.bh, n)
+    return ids.astype(jnp.int32)
+
+
+class RecsysService:
+    def __init__(self, params: Params, index: lsh_index.LSHIndex,
+                 sp: SparseMatrix, cfg: ServeConfig,
+                 JK: jax.Array | None = None):
+        self.params = params
+        self.index = index
+        self.sp = sp
+        self.cfg = cfg
+        self.JK = JK if cfg.use_jk else None
+        self.popular = (popular_shortlist(params, cfg.n_popular)
+                        if cfg.n_popular else None)
+        self._pending: list[np.ndarray] = []
+        self._n_pending = 0
+        self._results: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        self._flush_secs: list[float] = []
+        self._users_served = 0
+
+    # ---- core pipelines (fixed [micro_batch] shapes → warm jit caches) ----
+
+    def _recommend(self, user_ids: jax.Array):
+        cfg = self.cfg
+        if cfg.mode == "full":
+            return full_topn(self.params, user_ids, topn=cfg.topn)
+        cand = retrieve_for_users(
+            self.index, self.sp, user_ids, n_seeds=cfg.n_seeds, cap=cfg.cap,
+            C=cfg.C, JK=self.JK, popular=self.popular,
+            window=cfg.seed_window)
+        return score_candidates(self.params, user_ids, cand, topn=cfg.topn,
+                                tile_b=cfg.tile_b,
+                                interpret=cfg.interpret_mode(),
+                                impl=cfg.scorer_impl())
+
+    def warmup(self):
+        """Trace + compile both shapes before the timed traffic."""
+        ids = jnp.zeros((self.cfg.micro_batch,), jnp.int32)
+        jax.block_until_ready(self._recommend(ids))
+        return self
+
+    # ---- request plane ----
+
+    def submit(self, user_ids) -> None:
+        """Queue a request (any shape); flushes whole micro-batches."""
+        arr = np.atleast_1d(np.asarray(user_ids, np.int32))
+        self._pending.append(arr)
+        self._n_pending += arr.shape[0]
+        while self._n_pending >= self.cfg.micro_batch:
+            self._flush_one()
+
+    def flush(self) -> None:
+        """Drain everything pending (final partial batch is padded)."""
+        while self._n_pending:
+            self._flush_one()
+
+    def _flush_one(self) -> None:
+        mb = self.cfg.micro_batch
+        # consume only as many queued arrays as one micro-batch needs — a
+        # huge submit is sliced by view, not re-concatenated per flush
+        chunks, n = [], 0
+        while self._pending and n < mb:
+            a = self._pending.pop(0)
+            chunks.append(a)
+            n += a.shape[0]
+        flat = (chunks[0] if len(chunks) == 1 else
+                np.concatenate(chunks) if chunks else np.zeros((0,), np.int32))
+        take = flat[:mb]
+        if flat.size > mb:
+            self._pending.insert(0, flat[mb:])
+        n_real = take.size
+        self._n_pending -= n_real
+        if n_real < mb:  # pad the final partial batch to the jitted shape
+            take = np.concatenate([take, np.zeros(mb - n_real, np.int32)])
+
+        t0 = time.perf_counter()
+        scores, items = self._recommend(jnp.asarray(take))
+        jax.block_until_ready(items)
+        dt = time.perf_counter() - t0
+
+        self._flush_secs.append(dt)
+        self._users_served += n_real
+        self._results.append((take[:n_real],
+                              np.asarray(scores)[:n_real],
+                              np.asarray(items)[:n_real]))
+
+    def take_results(self):
+        """[(user_ids, scores, items)] for every flush since the last take."""
+        out, self._results = self._results, []
+        return out
+
+    def stats(self) -> dict:
+        secs = np.asarray(self._flush_secs) if self._flush_secs else \
+            np.zeros((1,))
+        total = float(secs.sum())
+        return dict(
+            mode=self.cfg.mode,
+            batches=len(self._flush_secs),
+            users=self._users_served,
+            qps=self._users_served / total if total else 0.0,
+            p50_ms=float(np.percentile(secs, 50) * 1e3),
+            p95_ms=float(np.percentile(secs, 95) * 1e3),
+        )
+
+    # ---- ingestion plane (paper Alg. 4) ----
+
+    def ingest(self, new_sigs: jax.Array, new_ids: jax.Array,
+               full_sigs: jax.Array | None = None) -> None:
+        """Insert new items into the index tail; rebuild only on overflow
+        (rebuild requires ``full_sigs`` [q, N_total])."""
+        if lsh_index.needs_rebuild(self.index, int(new_ids.shape[0])):
+            if full_sigs is None:
+                raise ValueError("tail overflow and no full_sigs to rebuild")
+            self.index = lsh_index.rebuild(self.index, full_sigs)
+        else:
+            self.index = lsh_index.insert(self.index, new_sigs, new_ids)
+
+    def ingest_online_update(self, state, N_old: int) -> None:
+        """Adopt a `core.online.online_update` result: swap in the grown
+        params/interactions and add only the *new* columns to the index,
+        re-signing from the updated accumulator cache (Alg. 4 lines 1–6).
+        Old columns keep their buckets (the paper's "remains unchanged").
+
+        The index is never rebuilt, but the grown parameter shapes force
+        one retrace of the serving pipelines — re-warm here so the compile
+        lands in ingestion time, not in a request's latency window."""
+        sigs = simlsh.pack_bits(state.S >= 0)                 # [q, N_new]
+        if state.N > N_old:
+            self.ingest(sigs[:, N_old:],
+                        jnp.arange(N_old, state.N, dtype=jnp.int32),
+                        full_sigs=sigs)
+        self.params = state.params
+        self.sp = state.sp
+        if self.JK is not None:
+            self.JK = state.JK
+        if self.cfg.n_popular:
+            self.popular = popular_shortlist(state.params, self.cfg.n_popular)
+        self.warmup()

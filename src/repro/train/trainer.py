@@ -45,15 +45,17 @@ class FitResult:
     history: list            # [(epoch, seconds, rmse)]
     neighbour_seconds: float
     S: jax.Array | None = None  # simLSH accumulators (online cache)
+    hash_key: jax.Array | None = None  # key S was encoded with (Alg. 4 needs
+                                       # the same Φ family for ΔΩ)
 
 
 def build_neighbours(sp: SparseMatrix, cfg: FitConfig, key):
-    """Neighbour search stage — returns (JK or None, seconds, S or None)."""
+    """Neighbour search stage — (JK or None, seconds, S or None, sig key)."""
     t0 = time.perf_counter()
     S = None
     k_sig, k_top = jax.random.split(key)
     if cfg.method == "none":
-        return None, 0.0, None
+        return None, 0.0, None, k_sig
     if cfg.method == "simlsh":
         sigs, S = simlsh.encode(sp, cfg.lsh, k_sig, return_accumulators=True)
         JK = topk.topk_from_signatures(sigs, k_top, K=cfg.K, band_cap=cfg.lsh.band_cap)
@@ -70,7 +72,7 @@ def build_neighbours(sp: SparseMatrix, cfg: FitConfig, key):
     else:
         raise ValueError(f"unknown method {cfg.method}")
     JK = jax.block_until_ready(JK)
-    return JK, time.perf_counter() - t0, S
+    return JK, time.perf_counter() - t0, S, k_sig
 
 
 def fit(train_coo, test_coo, shape, cfg: FitConfig,
@@ -80,7 +82,7 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
     sp = from_coo(*train_coo, shape)
     te_r, te_c, te_v = (jnp.asarray(a) for a in test_coo)
 
-    JK, nb_secs, S = build_neighbours(sp, cfg, k_nb)
+    JK, nb_secs, S, k_sig = build_neighbours(sp, cfg, k_nb)
     mf_only = cfg.method == "none"
     if JK is None:  # plain MF still needs a JK placeholder for batch assembly
         JK = jnp.zeros((sp.N, cfg.K), jnp.int32)
@@ -110,4 +112,4 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
         if cfg.ckpt_dir and cfg.ckpt_every and (ep + 1) % cfg.ckpt_every == 0:
             ckpt.save(cfg.ckpt_dir, params, step=ep + 1)
 
-    return FitResult(params, JK, history, nb_secs, S)
+    return FitResult(params, JK, history, nb_secs, S, hash_key=k_sig)

@@ -5,6 +5,61 @@ import dataclasses
 import numpy as np
 import pytest
 
+try:  # hypothesis is optional (see requirements-dev.txt) — shim if absent
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+    import sys
+    import types
+
+    class _Strategy:
+        """Minimal stand-in: only the draw rules our tests use."""
+
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _floats(lo, hi):
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def _settings(max_examples=10, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def _given(*strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            drawn = [p.name for p in params[len(params) - len(strategies):]]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                for _ in range(getattr(wrapper, "_shim_max_examples", 10)):
+                    kw = dict(kwargs)
+                    for name, s in zip(drawn, strategies):
+                        kw[name] = s.draw(rng)
+                    fn(*args, **kw)
+
+            # hide drawn params from pytest's fixture resolution
+            wrapper.__signature__ = sig.replace(
+                parameters=params[:len(params) - len(strategies)])
+            return wrapper
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers, _st.floats = _integers, _floats
+    _hyp.given, _hyp.settings, _hyp.strategies = _given, _settings, _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
 
 @pytest.fixture(scope="session")
 def tiny_dataset():

@@ -1,0 +1,120 @@
+"""core/online.py — Alg. 4 invariants: old-parameter freezing and
+incremental-signature consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import online, simlsh, topk
+from repro.core.model import init_from_data
+from repro.core.sgd import Hyper
+from repro.data.sparse import from_coo
+
+
+@pytest.fixture(scope="module")
+def small_state():
+    from repro.data import synthetic as syn
+    spec = dataclasses.replace(syn.MOVIELENS_LIKE, M=300, N=80, nnz=6000)
+    rows, cols, vals, _ = syn.generate(spec, seed=0)
+    sp = from_coo(rows, cols, vals, (spec.M, spec.N))
+    cfg = simlsh.SimLSHConfig(G=8, p=1, q=6)
+    key = jax.random.PRNGKey(0)
+    sigs, S = simlsh.encode(sp, cfg, key, return_accumulators=True)
+    JK = topk.topk_from_signatures(sigs, jax.random.PRNGKey(1), K=8,
+                                   band_cap=cfg.band_cap)
+    params = init_from_data(jax.random.PRNGKey(2), sp, 16, 8)
+    st = online.OnlineState(params=params, S=S, JK=JK, sp=sp,
+                            M=spec.M, N=spec.N, hash_key=key)
+    return st, cfg, key
+
+
+def _delta(st, M_new, N_new, n=800, seed=3):
+    """Fresh ΔΩ triples in the grown id space, disjoint from st.sp."""
+    rng = np.random.default_rng(seed)
+    nr = rng.integers(0, M_new, n).astype(np.int32)
+    nc = rng.integers(0, N_new, n).astype(np.int32)
+    pair = np.unique(nr.astype(np.int64) * N_new + nc)
+    old = set((np.asarray(st.sp.rows).astype(np.int64) * N_new
+               + np.asarray(st.sp.cols)).tolist())
+    pair = np.asarray([p for p in pair.tolist() if p not in old])
+    nr, nc = (pair // N_new).astype(np.int32), (pair % N_new).astype(np.int32)
+    nv = rng.uniform(1, 5, nr.shape[0]).astype(np.float32)
+    return jnp.asarray(nr), jnp.asarray(nc), jnp.asarray(nv)
+
+
+def test_online_update_freezes_old_parameters(small_state):
+    st, cfg, key = small_state
+    M2, N2 = st.M + 40, st.N + 12
+    nr, nc, nv = _delta(st, M2, N2)
+    st2 = online.online_update(st, nr, nc, nv, cfg, Hyper(),
+                               jax.random.PRNGKey(9), M_new=M2, N_new=N2,
+                               K=8, epochs=2)
+    p0, p1 = st.params, st2.params
+    # the paper's "remains unchanged": ids < old sizes are bit-identical
+    np.testing.assert_array_equal(np.asarray(p1.U[:st.M]), np.asarray(p0.U))
+    np.testing.assert_array_equal(np.asarray(p1.b[:st.M]), np.asarray(p0.b))
+    np.testing.assert_array_equal(np.asarray(p1.V[:st.N]), np.asarray(p0.V))
+    np.testing.assert_array_equal(np.asarray(p1.bh[:st.N]), np.asarray(p0.bh))
+    np.testing.assert_array_equal(np.asarray(p1.W[:st.N]), np.asarray(p0.W))
+    np.testing.assert_array_equal(np.asarray(p1.C[:st.N]), np.asarray(p0.C))
+    # old columns keep their Top-K lists; new ones got appended
+    np.testing.assert_array_equal(np.asarray(st2.JK[:st.N]),
+                                  np.asarray(st.JK))
+    assert st2.JK.shape == (N2, 8)
+    # and the new parameters actually moved away from their fresh init
+    # (same key split as online_update: grow, topk, train)
+    k_grow, _, _ = jax.random.split(jax.random.PRNGKey(9), 3)
+    p_init = online.grow_params(st.params, M2, N2, k_grow)
+    assert not np.array_equal(np.asarray(p1.U[st.M:]),
+                              np.asarray(p_init.U[st.M:]))
+    assert not np.array_equal(np.asarray(p1.V[st.N:]),
+                              np.asarray(p_init.V[st.N:]))
+
+
+def test_update_accumulators_matches_fresh_encode(small_state):
+    """Alg. 4 incremental hashing ≡ from-scratch encode on the merged
+    matrix (same key), up to float-summation-order noise near zero."""
+    st, cfg, key = small_state
+    N2 = st.N + 12
+    M2 = st.M + 40
+    nr, nc, nv = _delta(st, M2, N2)
+
+    S2, sigs_inc = simlsh.update_accumulators(st.S, nr, nc, nv, cfg, key, N2)
+
+    merged = from_coo(jnp.concatenate([st.sp.rows, nr]),
+                      jnp.concatenate([st.sp.cols, nc]),
+                      jnp.concatenate([st.sp.vals, nv]), (M2, N2))
+    sigs_fresh, S_fresh = simlsh.encode(merged, cfg, key,
+                                        return_accumulators=True)
+
+    np.testing.assert_allclose(np.asarray(S2), np.asarray(S_fresh),
+                               rtol=1e-4, atol=1e-3)
+    # bits may legitimately differ only where the accumulator is ~0
+    inc, fresh = np.asarray(sigs_inc), np.asarray(sigs_fresh)
+    tiny = np.abs(np.asarray(S_fresh)) < 1e-3
+    bit_ok = np.ones_like(inc, bool)
+    for b in range(cfg.sig_bits):
+        same = ((inc >> b) & 1) == ((fresh >> b) & 1)
+        bit_ok &= same | tiny[..., b]
+    assert bit_ok.all()
+
+
+def test_online_update_then_fresh_topk_for_new_columns(small_state):
+    st, cfg, key = small_state
+    M2, N2 = st.M, st.N + 10          # only new columns this time
+    nr, nc, nv = _delta(st, M2, N2, seed=11)
+    # make sure the new columns actually receive ratings
+    nc = jnp.where(nc < st.N, (nc % 10) + st.N, nc)
+    pair = np.unique(np.asarray(nr).astype(np.int64) * N2 + np.asarray(nc))
+    nr = jnp.asarray((pair // N2).astype(np.int32))
+    nc = jnp.asarray((pair % N2).astype(np.int32))
+    nv = nv[:nr.shape[0]]
+    st2 = online.online_update(st, nr, nc, nv, cfg, Hyper(),
+                               jax.random.PRNGKey(5), M_new=M2, N_new=N2,
+                               K=8, epochs=1)
+    assert st2.S.shape == (cfg.q, N2, cfg.sig_bits)
+    assert st2.sp.nnz == st.sp.nnz + int(nr.shape[0])
+    # every new column's Top-K entries point inside the grown id space
+    assert int(jnp.max(st2.JK[st.N:])) < N2

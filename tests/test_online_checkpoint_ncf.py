@@ -31,7 +31,7 @@ def test_online_freezes_old_params(tiny_dataset):
     JK = topk.topk_from_signatures(sigs, key, K=K, band_cap=cfg.band_cap)
     params = model.init_from_data(key, sp_old, F=8, K=K)
     st = online.OnlineState(params=params, S=S, JK=JK, sp=sp_old,
-                            M=spec.M, N=spec.N)
+                            M=spec.M, N=spec.N, hash_key=key)
     st2 = online.online_update(st, d_rows, d_cols, d_vals, cfg, Hyper(), key,
                                M_new=M_new, N_new=N_new, K=K, epochs=2,
                                batch=256)

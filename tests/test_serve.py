@@ -1,0 +1,310 @@
+"""repro.serve: bucketed index, retrieval, candidate-score kernel, service."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import simlsh, topk
+from repro.core.model import init_from_data
+from repro.core.simlsh import SimLSHConfig
+from repro.data.sparse import from_coo
+from repro.kernels.candidate_score.kernel import candidate_score_topn
+from repro.kernels.candidate_score.ops import score_candidates
+from repro.kernels.candidate_score.ref import candidate_score_topn_ref
+from repro.serve import (RecsysService, ServeConfig, build_index,
+                         dedup_candidates, insert, lookup_items,
+                         lookup_signatures, rebuild, retrieve_for_items,
+                         retrieve_for_users, seed_items)
+
+SENTINEL = topk.SENTINEL
+RNG = np.random.default_rng(0)
+
+
+def _dup_matrix(M=200, half=30, seed=0):
+    """Matrix whose column c+half duplicates column c exactly."""
+    rng = np.random.default_rng(seed)
+    rows = np.repeat(np.arange(M), 5).astype(np.int32)
+    cols = rng.integers(0, half, M * 5).astype(np.int32)
+    vals = rng.integers(1, 6, M * 5).astype(np.float32)
+    rows2 = np.concatenate([rows, rows])
+    cols2 = np.concatenate([cols, cols + half])
+    vals2 = np.concatenate([vals, vals])
+    keys = rows2.astype(np.int64) * (2 * half) + cols2
+    _, uniq = np.unique(keys, return_index=True)
+    return from_coo(rows2[uniq], cols2[uniq], vals2[uniq], (M, 2 * half))
+
+
+@pytest.fixture(scope="module")
+def indexed():
+    sp = _dup_matrix()
+    cfg = SimLSHConfig(G=8, p=2, q=8)
+    sigs = simlsh.encode(sp, cfg, jax.random.PRNGKey(0))
+    return sp, cfg, sigs, build_index(sigs, tail_cap=32)
+
+
+# ---------------------------------------------------------------- index
+
+def test_bucket_membership_roundtrip_vs_band_candidates(indexed):
+    """Index mates = same-signature items, consistent with band_candidates."""
+    sp, cfg, sigs, index = indexed
+    N = sp.N
+    cap = 8
+    ids = jnp.arange(N, dtype=jnp.int32)
+    mates = np.asarray(lookup_items(index, ids, cap=cap,
+                                    include_tail=False)).reshape(N, cfg.q, cap)
+    sigs_np = np.asarray(sigs)
+    bc = np.asarray(jax.vmap(
+        lambda s: topk.band_candidates(s, band_cap=cap))(sigs))   # [q, N, cap]
+    for b in range(cfg.q):
+        bucket_size = {s: c for s, c in
+                       zip(*np.unique(sigs_np[b], return_counts=True))}
+        for j in range(N):
+            got = set(mates[j, b][mates[j, b] != SENTINEL])
+            # membership: every mate shares the band signature
+            assert all(sigs_np[b, m] == sigs_np[b, j] for m in got)
+            assert j in got  # the item itself is always a bucket member
+            # small buckets: exact agreement with the sort-based path
+            if bucket_size[sigs_np[b, j]] <= cap // 2:
+                ref = set(bc[b, j][bc[b, j] != SENTINEL]) | {j}
+                assert got == ref
+
+
+def test_lookup_signatures_finds_exact_buckets(indexed):
+    sp, cfg, sigs, index = indexed
+    qsigs = jnp.asarray(np.asarray(sigs)[:, :16].T)               # [16, q]
+    cand = np.asarray(lookup_signatures(index, qsigs, cap=8, n_probe=2))
+    sigs_np = np.asarray(sigs)
+    for i in range(16):
+        got = cand[i][cand[i] != SENTINEL]
+        assert i in got  # probing with item i's own signatures finds i
+
+
+def test_retrieval_recall_vs_bruteforce_cosine():
+    """Candidates of an item must cover its brute-force cosine top-K on a
+    matrix with planted column clusters (same-group columns share raters)."""
+    rng = np.random.default_rng(0)
+    n_groups, ipg, upg, deg = 12, 10, 24, 16     # N=120 items, M=288 users
+    N, M = n_groups * ipg, n_groups * upg
+    cols = np.arange(N, dtype=np.int32).repeat(deg)
+    pick = np.argsort(rng.random((N, upg)), axis=1)[:, :deg]
+    rows = (pick + (np.arange(N) // ipg)[:, None] * upg).reshape(-1)
+    vals = rng.uniform(3, 5, rows.shape[0]).astype(np.float32)
+    sp = from_coo(rows.astype(np.int32), cols, vals, (M, N))
+
+    dense = np.zeros(sp.shape, np.float32)
+    dense[np.asarray(sp.rows), np.asarray(sp.cols)] = np.asarray(sp.vals)
+    norm = dense / np.maximum(np.linalg.norm(dense, axis=0, keepdims=True),
+                              1e-9)
+    cos = norm.T @ norm
+    np.fill_diagonal(cos, -1.0)
+    K = 3
+    exact = np.argsort(-cos, axis=1)[:, :K]
+
+    cfg = SimLSHConfig(G=8, p=1, q=12)
+    sigs = simlsh.encode(sp, cfg, jax.random.PRNGKey(0))
+    index = build_index(sigs, tail_cap=32)
+    cand = np.asarray(retrieve_for_items(
+        index, jnp.arange(N, dtype=jnp.int32), cap=8, C=32))
+    hits = sum(len(set(cand[j][cand[j] != SENTINEL]) & set(exact[j]))
+               for j in range(N))
+    recall = hits / (N * K)
+    # C=32 of 120 items → chance recall ≈ 0.27; demand far better
+    assert recall >= 0.7, f"recall@{K} vs cosine = {recall:.3f}"
+
+
+def test_retrieval_always_finds_duplicate_partner(indexed):
+    """Exact duplicate columns collide in every band → always retrieved."""
+    sp, cfg, sigs, index = indexed
+    cand = np.asarray(retrieve_for_items(
+        index, jnp.arange(sp.N, dtype=jnp.int32), cap=8, C=64))
+    half = sp.N // 2
+    partners = (np.arange(sp.N) + half) % sp.N
+    dup_hits = np.mean([partners[j] in set(cand[j]) for j in range(sp.N)])
+    assert dup_hits == 1.0
+
+
+def test_insert_then_lookup_and_rebuild(indexed):
+    sp, cfg, sigs, index = indexed
+    N = sp.N
+    # clone three existing items into the tail
+    src = jnp.asarray([0, 5, 9], jnp.int32)
+    new_ids = jnp.asarray([N, N + 1, N + 2], jnp.int32)
+    idx2 = insert(index, sigs[:, np.asarray(src)], new_ids)
+    assert idx2.n_items == N + 3
+
+    mates = np.asarray(lookup_items(idx2, src, cap=8))
+    for r, nid in enumerate(np.asarray(new_ids)):
+        assert nid in mates[r], "tail item not reachable from its bucket"
+    # tail item as the query finds its base-bucket mates
+    back = np.asarray(lookup_items(idx2, new_ids, cap=8))
+    for r, s in enumerate(np.asarray(src)):
+        assert s in back[r]
+
+    # rebuild folds the tail into the sorted core; membership is preserved
+    full_sigs = jnp.concatenate([sigs, sigs[:, np.asarray(src)]], axis=1)
+    idx3 = rebuild(idx2, full_sigs)
+    assert int(idx3.tail_len) == 0
+    mates3 = np.asarray(lookup_items(idx3, src, cap=8, include_tail=False))
+    for r, nid in enumerate(np.asarray(new_ids)):
+        assert nid in mates3[r]
+
+
+def test_insert_overflow_raises(indexed):
+    sp, cfg, sigs, index = indexed
+    with pytest.raises(ValueError, match="tail overflow"):
+        insert(index, jnp.tile(sigs[:, :1], (1, 33)),
+               jnp.arange(sp.N, sp.N + 33, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------- retrieval
+
+def test_dedup_candidates_unique_and_excludes():
+    cands = jnp.asarray([[3, 1, 3, SENTINEL, 1, 7, 2, 2],
+                         [5, 5, 5, 5, 5, 5, 5, 5]], jnp.int32)
+    out = np.asarray(dedup_candidates(cands, C=6))
+    assert sorted(out[0]) == [1, 2, 3, 7, SENTINEL, SENTINEL]
+    assert sorted(out[1]) == [5] + [SENTINEL] * 5
+    assert np.all(out[0][4:] == SENTINEL), "padding must sort last"
+    out = np.asarray(dedup_candidates(
+        cands, C=6, exclude_sorted=jnp.asarray([2, 5], jnp.int32)))
+    assert sorted(out[0]) == [1, 3, 7, SENTINEL, SENTINEL, SENTINEL]
+    assert list(out[1]) == [SENTINEL] * 6
+
+
+def test_dedup_truncation_not_biased_against_high_ids():
+    # overflow truncation must not systematically evict the largest ids
+    # (newly ingested items always have the highest ids)
+    row = jnp.arange(64, dtype=jnp.int32)[None, :]
+    out = np.asarray(dedup_candidates(row, C=16))[0]
+    kept = out[out != SENTINEL]
+    assert len(kept) == 16
+    assert (kept >= 48).any(), "top-quartile ids entirely evicted"
+
+
+def test_seed_items_are_top_rated(indexed):
+    sp, *_ = indexed
+    users = jnp.arange(8, dtype=jnp.int32)
+    seeds = np.asarray(seed_items(sp, users, n_seeds=4, window=32))
+    dense = np.zeros(sp.shape, np.float32)
+    dense[np.asarray(sp.rows), np.asarray(sp.cols)] = np.asarray(sp.vals)
+    for u in range(8):
+        s = seeds[u][seeds[u] != SENTINEL]
+        assert len(s) > 0
+        rated = dense[u][s]
+        assert np.all(rated > 0), "seed item the user never rated"
+        assert rated.min() >= np.sort(dense[u][dense[u] > 0])[::-1][
+            :len(s)].min() - 1e-6
+
+
+def test_retrieve_for_users_shapes_and_popular(indexed):
+    sp, cfg, sigs, index = indexed
+    users = jnp.arange(16, dtype=jnp.int32)
+    popular = jnp.asarray([2, 11, 17], jnp.int32)
+    cand = np.asarray(retrieve_for_users(
+        index, sp, users, n_seeds=4, cap=8, C=32, popular=popular))
+    assert cand.shape == (16, 32)
+    for u in range(16):
+        v = cand[u][cand[u] != SENTINEL]
+        assert len(v) == len(set(v)), "duplicate candidates"
+        assert {2, 11, 17} <= set(v), "popularity shortlist not reserved"
+
+
+# ---------------------------------------------------------------- kernel
+
+@pytest.mark.parametrize("B,C,F,topn,tile", [
+    (32, 64, 16, 10, 8), (7, 33, 8, 5, 16), (64, 128, 32, 1, 32)])
+def test_candidate_score_kernel_matches_ref(B, C, F, topn, tile):
+    a = lambda *s: jnp.asarray(RNG.normal(size=s).astype(np.float32))
+    u, bu, vc, bc = a(B, F), a(B), a(B, C, F), a(B, C)
+    mask = jnp.asarray((RNG.random((B, C)) < 0.7).astype(np.float32))
+    s1, i1 = candidate_score_topn(u, bu, vc, bc, mask, topn=topn, tile_b=tile)
+    s2, i2 = candidate_score_topn_ref(u, bu, vc, bc, mask, topn=topn)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_candidate_score_kernel_all_masked_rows():
+    a = lambda *s: jnp.asarray(RNG.normal(size=s).astype(np.float32))
+    B, C, F = 9, 16, 8
+    u, bu, vc, bc = a(B, F), a(B), a(B, C, F), a(B, C)
+    mask = jnp.zeros((B, C), jnp.float32)
+    s1, i1 = candidate_score_topn(u, bu, vc, bc, mask, topn=4, tile_b=4)
+    s2, i2 = candidate_score_topn_ref(u, bu, vc, bc, mask, topn=4)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_score_candidates_pallas_vs_ref_pipeline(indexed):
+    sp, cfg, sigs, index = indexed
+    params = init_from_data(jax.random.PRNGKey(1), sp, 16, 8)
+    users = jnp.arange(24, dtype=jnp.int32)
+    cand = retrieve_for_users(index, sp, users, n_seeds=4, cap=8, C=32)
+    s1, i1 = score_candidates(params, users, cand, topn=5, impl="pallas")
+    s2, i2 = score_candidates(params, users, cand, topn=5, impl="ref")
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    # returned items must come from the candidate set
+    c = np.asarray(cand)
+    for u in range(24):
+        got = np.asarray(i1[u])
+        assert set(got[got != SENTINEL]) <= set(c[u])
+
+
+# ---------------------------------------------------------------- service
+
+def test_service_candidate_matches_full_on_candidates(indexed):
+    """Candidate-mode top-1 score equals the full-mode score of that item."""
+    sp, cfg, sigs, index = indexed
+    params = init_from_data(jax.random.PRNGKey(1), sp, 16, 8)
+    scfg = ServeConfig(topn=5, micro_batch=16, C=48, n_seeds=4, cap=8,
+                       n_popular=8)
+    svc = RecsysService(params, index, sp, scfg).warmup()
+    full = RecsysService(params, index, sp,
+                         dataclasses.replace(scfg, mode="full")).warmup()
+    users = np.arange(16, dtype=np.int32)
+    svc.submit(users); svc.flush()
+    full.submit(users); full.flush()
+    _, s_c, i_c = svc.take_results()[0]
+    _, s_f, i_f = full.take_results()[0]
+    # every candidate-mode score must equal the exact score of that item
+    exact = (np.asarray(params.mu) + np.asarray(params.b)[users][:, None]
+             + np.asarray(params.bh)[i_c]
+             + np.einsum("bf,bnf->bn", np.asarray(params.U)[users],
+                         np.asarray(params.V)[i_c]))
+    np.testing.assert_allclose(s_c, exact, rtol=1e-4, atol=1e-4)
+    st = svc.stats()
+    assert st["users"] == 16 and st["batches"] == 1
+
+
+def test_service_micro_batching_and_partial_flush(indexed):
+    sp, cfg, sigs, index = indexed
+    params = init_from_data(jax.random.PRNGKey(1), sp, 16, 8)
+    scfg = ServeConfig(topn=3, micro_batch=8, C=32, n_seeds=4, cap=8,
+                       n_popular=0)
+    svc = RecsysService(params, index, sp, scfg)
+    svc.submit(np.arange(5));   assert svc.stats()["batches"] == 0
+    svc.submit(np.arange(5));   assert svc.stats()["batches"] == 1
+    svc.flush()
+    st = svc.stats()
+    assert st["users"] == 10 and st["batches"] == 2
+    res = svc.take_results()
+    assert sum(r[0].shape[0] for r in res) == 10
+    assert all(r[2].shape[1] == 3 for r in res)
+
+
+def test_service_ingest_serves_new_items(indexed):
+    sp, cfg, sigs, index = indexed
+    params = init_from_data(jax.random.PRNGKey(1), sp, 16, 8)
+    scfg = ServeConfig(topn=5, micro_batch=8, C=48, n_seeds=4, cap=8,
+                       n_popular=0)
+    svc = RecsysService(params, index, sp, scfg)
+    # clone item 0's signature as a new item; it joins item 0's buckets
+    svc.ingest(sigs[:, :1], jnp.asarray([sp.N], jnp.int32))
+    assert svc.index.n_items == sp.N + 1
+    cand = np.asarray(retrieve_for_items(
+        svc.index, jnp.asarray([0], jnp.int32), cap=8, C=32))
+    assert sp.N in cand[0]
