@@ -1,0 +1,176 @@
+"""Training-throughput benchmark: the PR-2 hot-path rebuild, measured.
+
+Compares, per synthetic Zipf scale, steady-state epoch time (jit compile
+excluded via AOT `.lower().compile()`) and updates/sec for:
+
+  * ``base``   — legacy `sgd.train_epoch`: per-batch B×K binary-search
+    assembly + per-batch collision rescaling,
+  * ``sched``  — `sgd.train_epoch_scheduled`: per-fit neighbour-gather
+    cache + conflict-free schedule (scaled fallback for zipf-head
+    leftovers), params donated across epochs,
+  * ``kernel`` — same, with the fused `kernels/mf_sgd` step
+    (``impl="auto"``: pure-jnp ref on CPU, Pallas elsewhere).
+
+Also trains both paths for equal epochs from the same init and reports the
+held-out RMSE of each, so the speedup is shown not to cost accuracy.
+Results land in ``BENCH_train.json`` at the repo root (see --out).
+
+    PYTHONPATH=src:. python benchmarks/bench_train.py [--scales small,medium,large]
+        [--epochs 5] [--smoke] [--out BENCH_train.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import model, sgd, simlsh, topk
+from repro.data import synthetic as syn
+from repro.data.sparse import conflict_free_schedule, from_coo, train_test_split
+from repro.kernels.mf_sgd.ops import resolve_impl
+
+SCALES = {
+    # name: (M, N, nnz, cf_batch)   — zipf-tailed via synthetic.generate
+    "smoke": (400, 100, 6_000, 96),
+    "small": (1_500, 300, 60_000, 256),
+    "medium": (3_000, 500, 150_000, 512),
+    "large": (8_000, 2_000, 600_000, 1_024),
+}
+F, K = 32, 16
+BATCH = 4096          # legacy-path batch (the trainer default)
+
+
+def setup(name: str, seed: int = 0):
+    M, N, nnz, cf_batch = SCALES[name]
+    spec = dataclasses.replace(syn.MOVIELENS_LIKE, M=M, N=N, nnz=nnz)
+    rows, cols, vals, _ = syn.generate(spec, seed=seed)
+    rng = np.random.default_rng(seed)
+    tr, te = train_test_split(rng, rows, cols, vals, 0.1)
+    sp = from_coo(*tr, (M, N))
+    key = jax.random.PRNGKey(seed)
+    lsh = simlsh.SimLSHConfig(G=8, p=2, q=4, band_cap=16)
+    sigs = simlsh.encode(sp, lsh, key)
+    JK = topk.topk_from_signatures(sigs, jax.random.fold_in(key, 1), K=K,
+                                   band_cap=lsh.band_cap)
+    params = model.init_from_data(jax.random.fold_in(key, 2), sp, F, K)
+    jax.block_until_ready(JK)
+    return sp, JK, params, te, cf_batch
+
+
+def run_epochs(compiled, run_args, params, epochs: int):
+    """AOT-compiled epoch fn → (params, [sec/epoch])."""
+    times = []
+    for ep in range(epochs):
+        t0 = time.perf_counter()
+        params = compiled(params, *run_args(ep))
+        jax.block_until_ready(params.U)
+        times.append(time.perf_counter() - t0)
+    return params, times
+
+
+def bench_scale(name: str, *, epochs: int, seed: int = 0) -> dict:
+    sp, JK, params0, te, cf_batch = setup(name, seed)
+    te_r, te_c, te_v = (jnp.asarray(a) for a in te)
+    hp = sgd.Hyper()
+    k_ep = jax.random.PRNGKey(seed + 17)
+    keys = lambda ep: jax.random.fold_in(k_ep, ep)
+    copy = lambda p: jax.tree.map(jnp.copy, p)
+    out = dict(name=name, M=sp.M, N=sp.N, nnz=sp.nnz, F=F, K=K,
+               batch=BATCH, cf_batch=cf_batch, epochs=epochs)
+
+    # --- base: legacy per-batch-search path -------------------------------
+    t0 = time.perf_counter()
+    base_fn = sgd.train_epoch.lower(
+        params0, sp, JK, keys(0), jnp.asarray(0), hp, batch=BATCH).compile()
+    compile_base = time.perf_counter() - t0
+    p_base, times = run_epochs(
+        base_fn, lambda ep: (sp, JK, keys(ep), jnp.asarray(ep), hp),
+        copy(params0), epochs)
+    sec = statistics.median(times)
+    out["base"] = dict(sec_per_epoch=sec, updates_per_sec=sp.nnz / sec,
+                       compile_sec=compile_base,
+                       rmse=float(model.rmse(p_base, sp, JK, te_r, te_c, te_v)))
+    emit(f"train.base.{name}", sec, f"ups={sp.nnz / sec:,.0f}")
+
+    # --- scheduled + cached gathers (± fused kernels) ---------------------
+    t0 = time.perf_counter()
+    cache = model.build_gather_cache(sp, JK)
+    sched = conflict_free_schedule(np.asarray(sp.rows), np.asarray(sp.cols),
+                                   batch=cf_batch, seed=seed)
+    jax.block_until_ready(cache.rnb)
+    prep = time.perf_counter() - t0
+    out["schedule"] = dict(prep_sec=prep, **sched.stats())
+
+    for label, use_kernels in (("sched", False), ("kernel", True)):
+        impl = resolve_impl("auto") if use_kernels else "ref"
+        t0 = time.perf_counter()
+        fn = sgd.train_epoch_scheduled.lower(
+            params0, sp, JK, cache, sched, keys(0), jnp.asarray(0), hp,
+            use_kernels=use_kernels, impl=impl,
+            interpret=jax.default_backend() == "cpu").compile()
+        compile_sec = time.perf_counter() - t0
+        p_end, times = run_epochs(
+            fn, lambda ep: (sp, JK, cache, sched, keys(ep), jnp.asarray(ep), hp),
+            copy(params0), epochs)
+        sec = statistics.median(times)
+        out[label] = dict(
+            sec_per_epoch=sec, updates_per_sec=sp.nnz / sec,
+            compile_sec=compile_sec,
+            rmse=float(model.rmse(p_end, sp, JK, te_r, te_c, te_v)))
+        emit(f"train.{label}.{name}", sec,
+             f"ups={sp.nnz / sec:,.0f};speedup={out['base']['sec_per_epoch'] / sec:.2f}x")
+
+    out["speedup_sched"] = out["base"]["sec_per_epoch"] / out["sched"]["sec_per_epoch"]
+    out["speedup_kernel"] = out["base"]["sec_per_epoch"] / out["kernel"]["sec_per_epoch"]
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scales", default="small,medium,large")
+    ap.add_argument("--epochs", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_train.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config + 2 epochs (CI gate; still writes --out)")
+    args = ap.parse_args(argv)
+
+    scales = ["smoke"] if args.smoke else [s for s in args.scales.split(",") if s]
+    epochs = 2 if args.smoke else args.epochs
+    results = []
+    for name in scales:
+        results.append(bench_scale(name, epochs=epochs, seed=args.seed))
+
+    doc = dict(
+        benchmark="bench_train",
+        backend=jax.default_backend(),
+        jax_version=jax.__version__,
+        protocol=dict(epochs=epochs, timing="median sec/epoch, AOT-compiled "
+                      "(compile excluded), donated params"),
+        scales=results,
+    )
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+
+    for r in results:
+        print(f"# {r['name']}: M={r['M']} N={r['N']} nnz={r['nnz']} | "
+              f"base {r['base']['sec_per_epoch']:.3f}s/ep | "
+              f"sched {r['sched']['sec_per_epoch']:.3f}s/ep "
+              f"({r['speedup_sched']:.2f}x) | "
+              f"kernel {r['kernel']['sec_per_epoch']:.3f}s/ep "
+              f"({r['speedup_kernel']:.2f}x) | rmse "
+              f"{r['base']['rmse']:.4f}/{r['sched']['rmse']:.4f}/"
+              f"{r['kernel']['rmse']:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

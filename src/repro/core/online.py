@@ -11,6 +11,11 @@ old *and* new columns).  The update:
   4. train only the new parameters on ΔΩ — old parameters are *frozen*
      (the paper's "remains unchanged"), implemented by masking the scatter
      updates to ids ≥ the old sizes.
+
+Unlike the offline `sgd.train_epoch_scheduled` hot path, this keeps the
+binary-search `assemble` (neighbour ratings come from Ω̂ via ``lookup_sp``,
+which no per-fit cache covers) and the collision-scaled step (ΔΩ batches
+are not conflict-free-scheduled).
 """
 from __future__ import annotations
 
@@ -57,8 +62,12 @@ def grow_params(p: Params, M_new: int, N_new: int, key) -> Params:
 
 
 def masked_culsh_step(p: Params, bt, hp: Hyper, decay, M_old: int, N_old: int):
-    """Eq. (5) step that only moves parameters of *new* rows/cols."""
-    p2 = culsh_step(p, bt, hp, decay)
+    """Eq. (5) step that only moves parameters of *new* rows/cols.
+
+    Stays on the scaled (``conflict_free=False``) path: ΔΩ batches are
+    plain shuffles, not scheduler output, so a new row/col can repeat
+    within a batch and the collision rescaling is load-bearing here."""
+    p2 = culsh_step(p, bt, hp, decay, conflict_free=False)
     rm = (jnp.arange(p.U.shape[0]) >= M_old).astype(jnp.float32)
     cm = (jnp.arange(p.V.shape[0]) >= N_old).astype(jnp.float32)
     mix = lambda new, old, m: old + m * (new - old)

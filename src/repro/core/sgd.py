@@ -10,6 +10,14 @@ with scatter-add (`.at[].add`).  When the batch is conflict-free (each i and
 each j at most once — the invariant the paper's D×D blocking provides) this
 is *exactly* Eq. (5) applied in parallel; with collisions it is the summed
 batch-SGD step.  Both engines are pure functions scanned over an epoch.
+
+Two epoch drivers:
+
+* ``train_epoch``            — general case: binary-search batch assembly +
+  collision rescaling every batch (also the Alg.-4 online building block).
+* ``train_epoch_scheduled``  — offline hot path: per-fit `NeighbourCache`
+  gathers + `EpochSchedule` conflict-free batches (+ optional fused Pallas
+  kernels), with params donated across epochs.  See bench_train.py.
 """
 from __future__ import annotations
 
@@ -19,8 +27,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.model import Batch, Params, assemble, predict, predict_mf
-from repro.data.sparse import SparseMatrix, epoch_batches
+from repro.core.model import (Batch, NeighbourCache, Params, assemble,
+                              assemble_cached, predict, predict_mf)
+from repro.data.sparse import EpochSchedule, SparseMatrix, epoch_batches
+from repro.kernels.mf_sgd.ops import apply_culsh_sgd, apply_mf_sgd
 
 
 @jax.tree_util.register_dataclass
@@ -67,52 +77,74 @@ def _error(r, pred, bce: bool):
     return r - (jax.nn.sigmoid(pred) if bce else pred)
 
 
-def mf_step(p: Params, bt: Batch, hp: Hyper, decay, bce: bool = False) -> Params:
+def _scales(p: Params, bt: Batch, conflict_free: bool):
+    """(si, sj, si_col, sj_col) — collision normalizers and their [B, 1]
+    broadcasts.  ``conflict_free`` (a static promise that each i and j
+    appears at most once, the D×D-block invariant) elides the two
+    O(M)+O(N) scatter-add allocations entirely: all counts are 1."""
+    if conflict_free:
+        one = jnp.ones((), jnp.float32)
+        return one, one, one, one
+    si, sj = _collision_scales(p, bt)
+    return si, sj, si[:, None], sj[:, None]
+
+
+def mf_step(p: Params, bt: Batch, hp: Hyper, decay, bce: bool = False,
+            conflict_free: bool = False) -> Params:
     """CUSGD++: u_i ← u_i + γ(e·v_j − λu·u_i);  v symmetric."""
     e = _error(bt.r, predict_mf(p, bt), bce) * bt.valid
     ui, vj = p.U[bt.i], p.V[bt.j]
-    si, sj = _collision_scales(p, bt)
+    _, _, si_c, sj_c = _scales(p, bt, conflict_free)
     gu = hp.a_u * decay
     gv = hp.a_v * decay
     vmask = bt.valid[:, None]
-    U = p.U.at[bt.i].add(gu * (e[:, None] * vj - hp.l_u * ui) * vmask
-                         * si[:, None])
-    V = p.V.at[bt.j].add(gv * (e[:, None] * ui - hp.l_v * vj) * vmask
-                         * sj[:, None])
+    U = p.U.at[bt.i].add(gu * (e[:, None] * vj - hp.l_u * ui) * vmask * si_c)
+    V = p.V.at[bt.j].add(gv * (e[:, None] * ui - hp.l_v * vj) * vmask * sj_c)
     return dataclasses.replace(p, U=U, V=V)
 
 
 def culsh_step(p: Params, bt: Batch, hp: Hyper, decay,
-               bce: bool = False) -> Params:
-    """CULSH-MF: the fused Eq. (5) update of {b, b̂, U, V, W, C}."""
+               bce: bool = False, conflict_free: bool = False) -> Params:
+    """CULSH-MF: the fused Eq. (5) update of {b, b̂, U, V, W, C}.
+
+    With ``conflict_free`` (static) the batch is promised to touch each i
+    and each j at most once (the D×D-block invariant), making the summed
+    scatter exactly the parallel Eq. (5) with no rescaling."""
     pred, aux = predict(p, bt)
     e = _error(bt.r, pred, bce) * bt.valid
     vmask = bt.valid[:, None]
     ui, vj = p.U[bt.i], p.V[bt.j]
-    si, sj = _collision_scales(p, bt)
+    si, sj, si_c, sj_c = _scales(p, bt, conflict_free)
 
     d = decay
     b = p.b.at[bt.i].add(hp.a_b * d * (e - hp.l_b * p.b[bt.i]) * bt.valid * si)
     bh = p.bh.at[bt.j].add(hp.a_bh * d * (e - hp.l_bh * p.bh[bt.j])
                            * bt.valid * sj)
     U = p.U.at[bt.i].add(hp.a_u * d * (e[:, None] * vj - hp.l_u * ui) * vmask
-                         * si[:, None])
+                         * si_c)
     V = p.V.at[bt.j].add(hp.a_v * d * (e[:, None] * ui - hp.l_v * vj) * vmask
-                         * sj[:, None])
+                         * sj_c)
     # w_{j,k} ← w + γw(|R|^{-1/2}·e·(r_nb − b̄_nb) − λw·w) on explicit slots
     wj, cj = p.W[bt.j], p.C[bt.j]
     dw = (aux["sR"][:, None] * e[:, None] * aux["resid"] - hp.l_w * wj) * bt.expl
     dc = (aux["sN"][:, None] * e[:, None] - hp.l_c * cj) * bt.impl
-    W = p.W.at[bt.j].add(hp.a_w * d * dw * vmask * sj[:, None])
-    C = p.C.at[bt.j].add(hp.a_c * d * dc * vmask * sj[:, None])
+    W = p.W.at[bt.j].add(hp.a_w * d * dw * vmask * sj_c)
+    C = p.C.at[bt.j].add(hp.a_c * d * dc * vmask * sj_c)
     return dataclasses.replace(p, b=b, bh=bh, U=U, V=V, W=W, C=C)
 
 
-@partial(jax.jit, static_argnames=("batch", "mf_only", "bce"))
+@partial(jax.jit, static_argnames=("batch", "mf_only", "bce"),
+         donate_argnames=("p",))
 def train_epoch(p: Params, sp: SparseMatrix, JK: jax.Array, key: jax.Array,
                 epoch: jax.Array, hp: Hyper, *, batch: int = 4096,
                 mf_only: bool = False, bce: bool = False) -> Params:
-    """One epoch: shuffled mini-batches scanned with the fused step."""
+    """One epoch: shuffled mini-batches scanned with the fused step.
+
+    The general-case engine: per-batch binary-search assembly and collision
+    rescaling, correct for any batching.  Offline fits should prefer
+    `train_epoch_scheduled`, which precomputes both.  ``p`` is donated —
+    U/V/… update in place across epochs instead of ping-ponging buffers.
+    """
     idx, valid = epoch_batches(key, sp.nnz, batch)
     decay = lr_decay(hp, epoch)
 
@@ -124,4 +156,68 @@ def train_epoch(p: Params, sp: SparseMatrix, JK: jax.Array, key: jax.Array,
         return pp, None
 
     p, _ = jax.lax.scan(body, p, (idx, valid))
+    return p
+
+
+@partial(jax.jit,
+         static_argnames=("mf_only", "bce", "use_kernels", "impl",
+                          "interpret", "tile_b"),
+         donate_argnames=("p",))
+def train_epoch_scheduled(p: Params, sp: SparseMatrix, JK: jax.Array,
+                          cache: NeighbourCache, sched: EpochSchedule,
+                          key: jax.Array, epoch: jax.Array, hp: Hyper, *,
+                          mf_only: bool = False, bce: bool = False,
+                          use_kernels: bool = False, impl: str = "ref",
+                          interpret: bool = True,
+                          tile_b: int = 256) -> Params:
+    """One epoch over a precomputed conflict-free schedule + gather cache.
+
+    The optimized hot path (cf. cuMF_SGD's conflict-free fine-grained SGD):
+
+    * batch assembly is plain `take` gathers from the per-fit
+      `NeighbourCache` — no B×K binary search per batch;
+    * conflict-free batches run the exact Eq. (5) step with no collision
+      rescaling, optionally through the fused `kernels/mf_sgd` step
+      (``use_kernels``; ``impl`` pre-resolved via `ops.resolve_impl` —
+      resolution needs the backend, so it cannot happen under jit);
+    * leftover batches (zipf heads) fall back to the scaled summed step;
+    * ``p`` is donated so parameters update in place across epochs.
+
+    Batch order is reshuffled every epoch (conflict-freedom is invariant
+    under batch permutation); within-batch composition is fixed per fit.
+    """
+    decay = lr_decay(hp, epoch)
+    k_cf, k_lo = jax.random.split(key)
+
+    def cf_body(pp, ib):
+        bidx, bvalid = ib
+        bt = assemble_cached(sp, JK, cache, bidx, bvalid)
+        if use_kernels and mf_only:
+            pp = apply_mf_sgd(pp, bt.i, bt.j, bt.r, bt.valid, hp, decay,
+                              impl=impl, tile_b=tile_b, interpret=interpret,
+                              bce=bce)
+        elif use_kernels:
+            pp = apply_culsh_sgd(pp, bt, hp, decay, impl=impl, tile_b=tile_b,
+                                 interpret=interpret, bce=bce)
+        elif mf_only:
+            pp = mf_step(pp, bt, hp, decay, bce, conflict_free=True)
+        else:
+            pp = culsh_step(pp, bt, hp, decay, bce, conflict_free=True)
+        return pp, None
+
+    def lo_body(pp, ib):
+        bidx, bvalid = ib
+        bt = assemble_cached(sp, JK, cache, bidx, bvalid)
+        pp = (mf_step(pp, bt, hp, decay, bce) if mf_only
+              else culsh_step(pp, bt, hp, decay, bce))
+        return pp, None
+
+    if sched.cf_idx.shape[0]:
+        order = jax.random.permutation(k_cf, sched.cf_idx.shape[0])
+        p, _ = jax.lax.scan(cf_body, p,
+                            (sched.cf_idx[order], sched.cf_valid[order]))
+    if sched.lo_idx.shape[0]:
+        order = jax.random.permutation(k_lo, sched.lo_idx.shape[0])
+        p, _ = jax.lax.scan(lo_body, p,
+                            (sched.lo_idx[order], sched.lo_valid[order]))
     return p

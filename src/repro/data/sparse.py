@@ -124,6 +124,131 @@ def epoch_batches(key: jax.Array, nnz: int, batch: int):
     return idx.reshape(nb, batch), valid.reshape(nb, batch)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EpochSchedule:
+    """Conflict-free epoch schedule (device arrays, built once per fit).
+
+    ``cf_idx[b]`` is a batch of triple indices in which every row id and
+    every col id appears **at most once** — the invariant the paper's D×D
+    blocking (cuMF_SGD-style, Fig. 5) provides per CUDA block, here enforced
+    per SIMD mini-batch so the scatter update is race-free and exactly
+    Eq. (5) (no collision rescaling needed).  ``lo_idx`` holds the
+    unschedulable leftovers (zipf heads whose degree exceeds the number of
+    conflict-free batches a width permits); they run through the scaled
+    fallback step.  Padding slots repeat index 0 with ``valid`` False.
+    """
+
+    cf_idx: jax.Array    # [nb_cf, W] int32
+    cf_valid: jax.Array  # [nb_cf, W] bool
+    lo_idx: jax.Array    # [nb_lo, B] int32
+    lo_valid: jax.Array  # [nb_lo, B] bool
+
+    def stats(self) -> dict:
+        n_cf = int(jnp.sum(self.cf_valid)) if self.cf_idx.size else 0
+        n_lo = int(jnp.sum(self.lo_valid)) if self.lo_idx.size else 0
+        slots = self.cf_idx.size + self.lo_idx.size
+        return dict(
+            n_cf=n_cf, n_lo=n_lo,
+            nb_cf=int(self.cf_idx.shape[0]), nb_lo=int(self.lo_idx.shape[0]),
+            cf_frac=n_cf / max(n_cf + n_lo, 1),
+            fill=(n_cf + n_lo) / max(slots, 1))
+
+
+def conflict_free_schedule(rows, cols, *, batch: int = 512,
+                           min_fill: int | None = None, slack: float = 1.0,
+                           seed: int = 0) -> EpochSchedule:
+    """Greedy conflict-free batch scheduler (host side, O(nnz·R/64)).
+
+    The exact-colouring refinement of MCULSH-MF's D×D rotation: a
+    first-fit edge colouring of the bipartite interaction graph with a
+    *round budget* ``R ≈ slack · nnz / batch`` and per-round capacity
+    ``batch``.  Triples are placed heaviest-endpoint-first into the lowest
+    round where (a) the round isn't full and (b) neither their row nor
+    col already appears — so every round is a conflict-free batch.  A col
+    of degree d can occupy at most min(d, R) rounds, so zipf heads
+    overflow: the unplaceable residue goes to the leftover pool, packed
+    into ordinary scaled-fallback batches.  Together the conflict-free and
+    leftover batches cover every triple exactly once per epoch.
+
+    Row/col occupancy is one python-int bitmask per id (R bits); first
+    free round = lowest zero bit — fast enough to rebuild per fit.
+    """
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    nnz = int(rows.shape[0])
+    if min_fill is None:
+        # half-full is the measured break-even on CPU: a sparser cf batch
+        # costs more in padded step work than the leftover path's collision
+        # rescaling does (see benchmarks/bench_train.py)
+        min_fill = max(1, batch // 2)
+    rng = np.random.default_rng(seed)
+
+    dr = np.bincount(rows, minlength=int(rows.max(initial=-1)) + 1)
+    dc = np.bincount(cols, minlength=int(cols.max(initial=-1)) + 1)
+    # a conflict-free batch holds each row/col at most once, so width beyond
+    # min(M, N) can only ever be padding — clamp
+    batch = max(1, min(batch, len(dr), len(dc)))
+    if min_fill > batch:
+        min_fill = max(1, batch // 2)
+    R = max(1, int(np.ceil(slack * nnz / batch)))
+    full = (1 << R) - 1
+    # heaviest endpoints first (they need the most distinct rounds),
+    # random tiebreak so batch composition stays decorrelated
+    order = np.lexsort((rng.random(nnz), -(dr[rows] + dc[cols])))
+    ri = rows[order].tolist()
+    ci = cols[order].tolist()
+
+    row_used = [0] * len(dr)
+    col_used = [0] * len(dc)
+    closed = 0                      # rounds at capacity
+    counts = [0] * R
+    cf_members: list[list[int]] = [[] for _ in range(R)]
+    leftovers: list[int] = []
+    for t in range(nnz):
+        i, j = ri[t], ci[t]
+        free = ~(row_used[i] | col_used[j] | closed) & full
+        if not free:
+            leftovers.append(order[t])
+            continue
+        low = free & -free
+        r = low.bit_length() - 1
+        cf_members[r].append(order[t])
+        row_used[i] |= low
+        col_used[j] |= low
+        cnt = counts[r] + 1
+        counts[r] = cnt
+        if cnt == batch:
+            closed |= low
+
+    # sparse tail rounds aren't worth a padded batch — divert to leftovers
+    cf_batches = []
+    for members in cf_members:
+        if len(members) >= min_fill:
+            cf_batches.append(np.asarray(members, np.int64))
+        else:
+            leftovers.extend(members)
+
+    def pack(chunks, width):
+        if not chunks:
+            z = np.zeros((0, width), np.int32)
+            return z, np.zeros((0, width), bool)
+        idx = np.zeros((len(chunks), width), np.int32)
+        valid = np.zeros((len(chunks), width), bool)
+        for b, chunk in enumerate(chunks):
+            idx[b, :len(chunk)] = chunk
+            valid[b, :len(chunk)] = True
+        return idx, valid
+
+    cf_idx, cf_valid = pack(cf_batches, batch)
+    lo = np.asarray(leftovers, np.int64)
+    rng.shuffle(lo)
+    lo_idx, lo_valid = pack(
+        [lo[c0:c0 + batch] for c0 in range(0, len(lo), batch)], batch)
+    return EpochSchedule(jnp.asarray(cf_idx), jnp.asarray(cf_valid),
+                         jnp.asarray(lo_idx), jnp.asarray(lo_valid))
+
+
 def block_partition(rows, cols, M, N, D):
     """MCULSH-MF Fig.5 D×D blocking (host side).
 

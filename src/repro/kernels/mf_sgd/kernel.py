@@ -1,4 +1,6 @@
-"""Pallas TPU kernel: fused CUSGD++ step (paper Alg. 2, update rule Eq. 5).
+"""Pallas TPU kernels: fused SGD steps — CUSGD++ (`mf_sgd_step`, paper
+Alg. 2) and the six-parameter CULSH-MF step (`culsh_sgd_step`, Alg. 3),
+both over conflict-free batch tiles (update rule Eq. 5).
 
 For a conflict-free batch tile (each i / j at most once — the invariant the
 paper's D×D blocking provides), one VMEM pass computes
@@ -21,13 +23,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _sgd_kernel(u_ref, v_ref, r_ref, valid_ref, hp_ref, u_out, v_out, e_out):
+def _sgd_kernel(bce, u_ref, v_ref, r_ref, valid_ref, hp_ref,
+                u_out, v_out, e_out):
     u = u_ref[...]                       # [TB, F]
     v = v_ref[...]
     r = r_ref[...]                       # [TB]
     valid = valid_ref[...]
     gu, gv, lu, lv = hp_ref[0], hp_ref[1], hp_ref[2], hp_ref[3]
-    e = (r - jnp.sum(u * v, axis=-1)) * valid
+    pred = jnp.sum(u * v, axis=-1)
+    e = (r - (jax.nn.sigmoid(pred) if bce else pred)) * valid
     eb = e[:, None]
     vm = valid[:, None]
     u_out[...] = u + gu * (eb * v - lu * u) * vm
@@ -35,9 +39,82 @@ def _sgd_kernel(u_ref, v_ref, r_ref, valid_ref, hp_ref, u_out, v_out, e_out):
     e_out[...] = e
 
 
-@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def _culsh_kernel(bce, u_ref, v_ref, w_ref, c_ref, resid_ref, impl_ref,
+                  expl_ref, b_ref, bh_ref, bbar_ref, r_ref, valid_ref,
+                  sR_ref, sN_ref, hp_ref,
+                  b_out, bh_out, u_out, v_out, w_out, c_out):
+    u, v = u_ref[...], v_ref[...]              # [TB, F]
+    w, c = w_ref[...], c_ref[...]              # [TB, K]
+    resid = resid_ref[...]                     # [TB, K] (expl-masked already)
+    impl, expl = impl_ref[...], expl_ref[...]
+    b, bh = b_ref[...], bh_ref[...]            # [TB]
+    r, valid = r_ref[...], valid_ref[...]
+    sR, sN = sR_ref[...], sN_ref[...]
+    gb, gbh, gu, gv = hp_ref[0], hp_ref[1], hp_ref[2], hp_ref[3]
+    gw, gc = hp_ref[4], hp_ref[5]
+    lb, lbh, lu, lv = hp_ref[6], hp_ref[7], hp_ref[8], hp_ref[9]
+    lw, lc = hp_ref[10], hp_ref[11]
+
+    pred = (bbar_ref[...] + sR * jnp.sum(resid * w, axis=-1)
+            + sN * jnp.sum(impl * c, axis=-1) + jnp.sum(u * v, axis=-1))
+    e = (r - (jax.nn.sigmoid(pred) if bce else pred)) * valid
+    eb = e[:, None]
+    vm = valid[:, None]
+    b_out[...] = b + gb * (e - lb * b) * valid
+    bh_out[...] = bh + gbh * (e - lbh * bh) * valid
+    u_out[...] = u + gu * (eb * v - lu * u) * vm
+    v_out[...] = v + gv * (eb * u - lv * v) * vm
+    w_out[...] = w + gw * (sR[:, None] * eb * resid - lw * w) * expl * vm
+    c_out[...] = c + gc * (sN[:, None] * eb - lc * c) * impl * vm
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret", "bce"))
+def culsh_sgd_step(b_i, bh_j, u, v, w, c, resid, impl, expl, bbar, r, valid,
+                   sR, sN, hp, *, tile_b: int = 256, interpret: bool = True,
+                   bce: bool = False):
+    """Fused six-parameter CULSH-MF step (paper Alg. 3, update rule Eq. 5).
+
+    One VMEM pass per batch tile computes the Eq. (1) forward *and* all six
+    parameter deltas — the TPU image of the paper's register-resident CUDA
+    kernel, which the load-balance property of §4.2(2) (every sample touches
+    exactly K of the 2K {w, c} slots) keeps dense.  Batch must be
+    conflict-free; all operands are row-aligned (gathers happen in `ops`).
+    ``hp`` packs the 12 decayed scalars (see `ref.culsh_sgd_step_ref`).
+    """
+    B, F = u.shape
+    K = w.shape[1]
+    pad = (-B) % tile_b
+    if pad:
+        padded = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        b_i, bh_j, u, v, w, c, resid, impl, expl, bbar, r, valid, sR, sN = map(
+            padded, (b_i, bh_j, u, v, w, c, resid, impl, expl, bbar, r, valid,
+                     sR, sN))
+    Bp = u.shape[0]
+    mat = lambda d: pl.BlockSpec((tile_b, d), lambda i: (i, 0))
+    vec = pl.BlockSpec((tile_b,), lambda i: (i,))
+    hp_spec = pl.BlockSpec((12,), lambda i: (0,))
+    outs = pl.pallas_call(
+        functools.partial(_culsh_kernel, bce),
+        grid=(Bp // tile_b,),
+        in_specs=[mat(F), mat(F), mat(K), mat(K), mat(K), mat(K), mat(K),
+                  vec, vec, vec, vec, vec, vec, vec, hp_spec],
+        out_specs=[vec, vec, mat(F), mat(F), mat(K), mat(K)],
+        out_shape=[jax.ShapeDtypeStruct((Bp,), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp,), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, F), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, F), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, K), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, K), jnp.float32)],
+        interpret=interpret,
+    )(u, v, w, c, resid, impl, expl, b_i, bh_j, bbar, r,
+      valid.astype(jnp.float32), sR, sN, hp.astype(jnp.float32))
+    return tuple(o[:B] for o in outs)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret", "bce"))
 def mf_sgd_step(u, v, r, valid, gamma_u, gamma_v, lam_u, lam_v, *,
-                tile_b: int = 256, interpret: bool = True):
+                tile_b: int = 256, interpret: bool = True,
+                bce: bool = False):
     """u,v [B,F]; r,valid [B] → (u', v', e).  Batch must be conflict-free."""
     B, F = u.shape
     pad = (-B) % tile_b
@@ -53,7 +130,7 @@ def mf_sgd_step(u, v, r, valid, gamma_u, gamma_v, lam_u, lam_v, *,
     vec = pl.BlockSpec((tile_b,), lambda i: (i,))
     hp_spec = pl.BlockSpec((4,), lambda i: (0,))
     u2, v2, e = pl.pallas_call(
-        _sgd_kernel,
+        functools.partial(_sgd_kernel, bce),
         grid=(Bp // tile_b,),
         in_specs=[mat, mat, vec, vec, hp_spec],
         out_specs=[mat, mat, vec],

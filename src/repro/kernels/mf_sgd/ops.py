@@ -1,22 +1,83 @@
-"""jit'd wrapper: gather rows → fused kernel step → scatter rows back.
+"""jit'd wrappers: gather rows → fused kernel step → scatter deltas back.
 
-The conflict-free batch guarantee makes the scatter race-free (each i/j
-appears once), matching MCULSH-MF's D×D-block invariant.
+The conflict-free batch guarantee (see `data.sparse.conflict_free_schedule`)
+makes the scatter race-free: each valid i/j appears once, so adding the
+per-row *delta* is exactly Eq. (5).  Deltas (not `.set`) also make padding
+slots — which repeat triple 0 with ``valid`` False — harmless no-ops even
+when triple 0 is live in the same batch.
+
+``impl="auto"`` resolves to the pure-jnp ref on CPU (where Pallas only has
+the slow interpreter) and the fused Pallas kernel elsewhere, mirroring
+`kernels.candidate_score`.  This is the training hot path behind
+`FitConfig.use_kernels` (via `sgd.train_epoch_scheduled`).
 """
 from __future__ import annotations
 
+import dataclasses
+from functools import partial
+
+import jax
 import jax.numpy as jnp
 
-from repro.core.model import Params
-from repro.kernels.mf_sgd.kernel import mf_sgd_step
+from repro.core.model import Batch, Params
+from repro.kernels.mf_sgd.kernel import culsh_sgd_step, mf_sgd_step
+from repro.kernels.mf_sgd.ref import culsh_sgd_step_ref, mf_sgd_step_ref
+
+
+def resolve_impl(impl: str) -> str:
+    """'auto' → 'ref' on CPU, 'pallas' on accelerators (call outside jit)."""
+    if impl != "auto":
+        return impl
+    return "ref" if jax.default_backend() == "cpu" else "pallas"
 
 
 def apply_mf_sgd(p: Params, i, j, r, valid, hp, decay, *,
-                 interpret: bool = True) -> Params:
-    import dataclasses
-    u2, v2, _ = mf_sgd_step(
-        p.U[i], p.V[j], r, valid,
-        jnp.float32(hp.a_u) * decay, jnp.float32(hp.a_v) * decay,
-        jnp.float32(hp.l_u), jnp.float32(hp.l_v), interpret=interpret)
+                 impl: str = "pallas", tile_b: int = 256,
+                 interpret: bool = True, bce: bool = False) -> Params:
+    """CUSGD++ step applied to Params via a conflict-free batch."""
+    u, v = p.U[i], p.V[j]
+    args = (u, v, r, valid,
+            jnp.float32(hp.a_u) * decay, jnp.float32(hp.a_v) * decay,
+            jnp.float32(hp.l_u), jnp.float32(hp.l_v))
+    if impl == "ref":
+        u2, v2, _ = mf_sgd_step_ref(*args, bce=bce)
+    else:
+        u2, v2, _ = mf_sgd_step(*args, tile_b=tile_b, interpret=interpret,
+                                bce=bce)
     return dataclasses.replace(
-        p, U=p.U.at[i].set(u2), V=p.V.at[j].set(v2))
+        p, U=p.U.at[i].add(u2 - u), V=p.V.at[j].add(v2 - v))
+
+
+def apply_culsh_sgd(p: Params, bt: Batch, hp, decay, *,
+                    impl: str = "pallas", tile_b: int = 256,
+                    interpret: bool = True, bce: bool = False) -> Params:
+    """Fused six-parameter CULSH-MF step applied to Params.
+
+    XLA-level gathers assemble the row-aligned operands (same split as
+    `candidate_score`: gathers outside, dense tiles inside the kernel).
+    """
+    b_i, bh_j = p.b[bt.i], p.bh[bt.j]
+    u, v, w, c = p.U[bt.i], p.V[bt.j], p.W[bt.j], p.C[bt.j]
+    bbar = p.mu + b_i + bh_j
+    bbar_nb = p.mu + b_i[:, None] + p.bh[bt.nb]
+    resid = (bt.rnb - bbar_nb) * bt.expl
+    nR = jnp.sum(bt.expl, 1)
+    nN = jnp.sum(bt.impl, 1)
+    sR = jnp.where(nR > 0, jax.lax.rsqrt(jnp.maximum(nR, 1.0)), 0.0)
+    sN = jnp.where(nN > 0, jax.lax.rsqrt(jnp.maximum(nN, 1.0)), 0.0)
+    d = decay
+    hpv = jnp.stack([hp.a_b * d, hp.a_bh * d, hp.a_u * d, hp.a_v * d,
+                     hp.a_w * d, hp.a_c * d,
+                     jnp.float32(hp.l_b), jnp.float32(hp.l_bh),
+                     jnp.float32(hp.l_u), jnp.float32(hp.l_v),
+                     jnp.float32(hp.l_w), jnp.float32(hp.l_c)])
+    step = (culsh_sgd_step_ref if impl == "ref"
+            else partial(culsh_sgd_step, tile_b=tile_b, interpret=interpret))
+    b2, bh2, u2, v2, w2, c2 = step(
+        b_i, bh_j, u, v, w, c, resid, bt.impl, bt.expl, bbar, bt.r, bt.valid,
+        sR, sN, hpv, bce=bce)
+    return dataclasses.replace(
+        p,
+        b=p.b.at[bt.i].add(b2 - b_i), bh=p.bh.at[bt.j].add(bh2 - bh_j),
+        U=p.U.at[bt.i].add(u2 - u), V=p.V.at[bt.j].add(v2 - v),
+        W=p.W.at[bt.j].add(w2 - w), C=p.C.at[bt.j].add(c2 - c))

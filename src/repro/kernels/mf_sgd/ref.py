@@ -1,11 +1,41 @@
-"""Pure-jnp oracle for the fused CUSGD++ step."""
+"""Pure-jnp oracles for the fused SGD steps (CUSGD++ and CULSH-MF).
+
+On CPU these *are* the fast path: `ops` resolves ``impl="auto"`` to the ref
+(Pallas only has the interpreter there), mirroring `candidate_score`.
+"""
+import jax
 import jax.numpy as jnp
 
 
-def mf_sgd_step_ref(u, v, r, valid, gamma_u, gamma_v, lam_u, lam_v):
-    e = (r - jnp.sum(u * v, axis=-1)) * valid
+def mf_sgd_step_ref(u, v, r, valid, gamma_u, gamma_v, lam_u, lam_v, *,
+                    bce: bool = False):
+    pred = jnp.sum(u * v, axis=-1)
+    e = (r - (jax.nn.sigmoid(pred) if bce else pred)) * valid
     eb = e[:, None]
     vm = valid[:, None]
     u2 = u + gamma_u * (eb * v - lam_u * u) * vm
     v2 = v + gamma_v * (eb * u - lam_v * v) * vm
     return u2, v2, e
+
+
+def culsh_sgd_step_ref(b_i, bh_j, u, v, w, c, resid, impl, expl, bbar, r,
+                       valid, sR, sN, hp, *, bce: bool = False):
+    """Fused six-parameter Eq. (5) step on a conflict-free batch tile.
+
+    ``hp`` packs the 12 decayed hyper scalars
+    ``(γb, γb̂, γu, γv, γw, γc, λb, λb̂, λu, λv, λw, λc)``; all other
+    operands are row-aligned gathers (see `ops.apply_culsh_sgd`).
+    """
+    gb, gbh, gu, gv, gw, gc, lb, lbh, lu, lv, lw, lc = hp
+    pred = (bbar + sR * jnp.sum(resid * w, axis=-1)
+            + sN * jnp.sum(impl * c, axis=-1) + jnp.sum(u * v, axis=-1))
+    e = (r - (jax.nn.sigmoid(pred) if bce else pred)) * valid
+    eb = e[:, None]
+    vm = valid[:, None]
+    b2 = b_i + gb * (e - lb * b_i) * valid
+    bh2 = bh_j + gbh * (e - lbh * bh_j) * valid
+    u2 = u + gu * (eb * v - lu * u) * vm
+    v2 = v + gv * (eb * u - lv * v) * vm
+    w2 = w + gw * (sR[:, None] * eb * resid - lw * w) * expl * vm
+    c2 = c + gc * (sN[:, None] * eb - lc * c) * impl * vm
+    return b2, bh2, u2, v2, w2, c2

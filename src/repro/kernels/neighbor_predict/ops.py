@@ -1,8 +1,11 @@
 """jit'd wrapper: assemble Eq. (1) operands from a Batch + predict fused.
 
-Drop-in replacement for core.model.predict's forward value (used when
-FitConfig.use_kernels=True); gathers happen at XLA level, the fused
-reduction in the Pallas kernel.
+Drop-in replacement for core.model.predict's forward value — inference /
+eval only.  The *training* hot path behind ``FitConfig.use_kernels`` does
+not route through here: `sgd.train_epoch_scheduled` uses the fused
+`kernels/mf_sgd` step (`apply_culsh_sgd` / `apply_mf_sgd`), which computes
+this same forward inside the update kernel.  Gathers happen at XLA level,
+the fused reduction in the Pallas kernel.
 """
 from __future__ import annotations
 

@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.core import baselines as bl
 from repro.core import gsm, model, sgd, simlsh, topk
-from repro.data.sparse import SparseMatrix, from_coo
+from repro.data.sparse import SparseMatrix, conflict_free_schedule, from_coo
+from repro.kernels.mf_sgd.ops import resolve_impl
 from repro.train import checkpoint as ckpt
 
 
@@ -35,18 +36,31 @@ class FitConfig:
     ckpt_every: int = 0          # epochs; 0 = off
     eval_every: int = 1
     loss: str = "l2"             # l2 | bce (implicit feedback, paper §5.4)
-    use_kernels: bool = False    # Pallas (interpret on CPU) for the hot ops
+    schedule: str = "auto"       # auto | conflict_free | none — 'none' is the
+                                 # legacy per-batch-search path (bench
+                                 # baseline); 'auto' currently == conflict_free
+                                 # (reserved for a backend/shape heuristic)
+    cf_batch: int = 512          # conflict-free batch width (≤ min(M, N) useful)
+    use_kernels: bool = False    # route conflict-free batches through the
+                                 # fused kernels/mf_sgd training step
+    kernel_impl: str = "auto"    # auto | pallas | ref — 'auto' picks the
+                                 # pure-jnp ref on CPU (Pallas only
+                                 # interprets there), the kernel elsewhere
 
 
 @dataclasses.dataclass
 class FitResult:
     params: model.Params
     JK: jax.Array | None
-    history: list            # [(epoch, seconds, rmse)]
+    history: list            # [(epoch, seconds, rmse)] — seconds exclude
+                             # jit compilation (see compile_seconds)
     neighbour_seconds: float
     S: jax.Array | None = None  # simLSH accumulators (online cache)
     hash_key: jax.Array | None = None  # key S was encoded with (Alg. 4 needs
                                        # the same Φ family for ΔΩ)
+    compile_seconds: float = 0.0  # AOT epoch-fn compile (one-off)
+    prep_seconds: float = 0.0     # gather cache + conflict-free schedule
+    schedule_stats: dict | None = None
 
 
 def build_neighbours(sp: SparseMatrix, cfg: FitConfig, key):
@@ -95,13 +109,63 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
         if restored is not None:
             params, start_epoch = restored
 
+    if cfg.schedule not in ("auto", "conflict_free", "none"):
+        raise ValueError(f"unknown schedule {cfg.schedule}")
+    scheduled = cfg.schedule != "none"
+    bce = cfg.loss == "bce"
+
+    # once-per-fit precomputation: neighbour-gather cache + conflict-free
+    # schedule (Ω and J^K are fixed for the whole offline fit)
+    prep_secs = 0.0
+    sched_stats = None
+    if scheduled:
+        t0 = time.perf_counter()
+        if mf_only:  # mf_step never reads neighbour slots — zero-width
+            z = jnp.zeros((sp.nnz, 0), jnp.float32)  # cache, no allocation
+            cache = model.NeighbourCache(z, z)
+        else:
+            cache = model.build_gather_cache(sp, JK)
+        sched = conflict_free_schedule(
+            np.asarray(sp.rows), np.asarray(sp.cols),
+            batch=min(cfg.cf_batch, cfg.batch), seed=cfg.seed)
+        jax.block_until_ready(cache.rnb)
+        prep_secs = time.perf_counter() - t0
+        sched_stats = sched.stats()
+        if log:
+            log(f"schedule: {sched_stats['nb_cf']} cf + "
+                f"{sched_stats['nb_lo']} leftover batches "
+                f"(cf_frac={sched_stats['cf_frac']:.2f}, "
+                f"fill={sched_stats['fill']:.2f}, prep={prep_secs:.2f}s)")
+
+    # impl resolution needs the backend, so it happens here, outside jit
+    # (mirrors the candidate_score impl="auto" pattern)
+    impl = resolve_impl(cfg.kernel_impl) if cfg.use_kernels else "ref"
+    interpret = jax.default_backend() == "cpu"
+
+    # AOT-compile the epoch fn so jit compilation is charged to
+    # compile_seconds, never to history / benchmark training time
+    t0 = time.perf_counter()
+    ep0 = jnp.asarray(start_epoch)
+    k0 = jax.random.fold_in(k_ep, start_epoch)
+    if scheduled:
+        epoch_fn = sgd.train_epoch_scheduled.lower(
+            params, sp, JK, cache, sched, k0, ep0, cfg.hp, mf_only=mf_only,
+            bce=bce, use_kernels=cfg.use_kernels, impl=impl,
+            interpret=interpret).compile()
+        run = lambda pp, kk, ee: epoch_fn(pp, sp, JK, cache, sched, kk, ee,
+                                          cfg.hp)
+    else:
+        epoch_fn = sgd.train_epoch.lower(
+            params, sp, JK, k0, ep0, cfg.hp, batch=cfg.batch,
+            mf_only=mf_only, bce=bce).compile()
+        run = lambda pp, kk, ee: epoch_fn(pp, sp, JK, kk, ee, cfg.hp)
+    compile_secs = time.perf_counter() - t0
+
     history = []
     t_train = 0.0
     for ep in range(start_epoch, cfg.epochs):
         t0 = time.perf_counter()
-        params = sgd.train_epoch(params, sp, JK, jax.random.fold_in(k_ep, ep),
-                                 jnp.asarray(ep), cfg.hp, batch=cfg.batch,
-                                 mf_only=mf_only, bce=cfg.loss == "bce")
+        params = run(params, jax.random.fold_in(k_ep, ep), jnp.asarray(ep))
         jax.block_until_ready(params.U)
         t_train += time.perf_counter() - t0
         if cfg.eval_every and (ep + 1) % cfg.eval_every == 0:
@@ -112,4 +176,6 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
         if cfg.ckpt_dir and cfg.ckpt_every and (ep + 1) % cfg.ckpt_every == 0:
             ckpt.save(cfg.ckpt_dir, params, step=ep + 1)
 
-    return FitResult(params, JK, history, nb_secs, S, hash_key=k_sig)
+    return FitResult(params, JK, history, nb_secs, S, hash_key=k_sig,
+                     compile_seconds=compile_secs, prep_seconds=prep_secs,
+                     schedule_stats=sched_stats)

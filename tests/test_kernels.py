@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.mf_sgd.kernel import mf_sgd_step
-from repro.kernels.mf_sgd.ref import mf_sgd_step_ref
+from repro.kernels.mf_sgd.kernel import culsh_sgd_step, mf_sgd_step
+from repro.kernels.mf_sgd.ref import culsh_sgd_step_ref, mf_sgd_step_ref
 from repro.kernels.neighbor_predict.kernel import neighbor_predict
 from repro.kernels.neighbor_predict.ref import neighbor_predict_ref
 from repro.kernels.simlsh_encode.kernel import simlsh_encode
@@ -64,6 +64,40 @@ def test_neighbor_predict_property(B, K, seed):
     np.testing.assert_allclose(
         np.asarray(neighbor_predict(*args, tile_b=16)),
         np.asarray(neighbor_predict_ref(*args)), rtol=1e-4, atol=1e-4)
+
+
+def _culsh_args(B, F, K, rng):
+    a = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32))
+    expl = jnp.asarray(rng.integers(0, 2, (B, K)).astype(np.float32))
+    impl = 1.0 - expl
+    valid = jnp.asarray(rng.integers(0, 2, B).astype(np.float32))
+    nR, nN = expl.sum(1), impl.sum(1)
+    sR = jnp.where(nR > 0, 1 / jnp.sqrt(jnp.maximum(nR, 1.0)), 0.0)
+    sN = jnp.where(nN > 0, 1 / jnp.sqrt(jnp.maximum(nN, 1.0)), 0.0)
+    hp = jnp.abs(a(12)) * 0.05
+    return (a(B), a(B), a(B, F), a(B, F), a(B, K), a(B, K), a(B, K) * expl,
+            impl, expl, a(B), a(B), valid, sR, sN, hp)
+
+
+@pytest.mark.parametrize("bce", [False, True])
+@pytest.mark.parametrize("B,F,K,tile", [
+    (64, 16, 8, 32), (100, 32, 16, 128), (3, 8, 4, 8),
+])
+def test_culsh_sgd_shapes(B, F, K, tile, bce):
+    args = _culsh_args(B, F, K, np.random.default_rng(B * 7 + K))
+    got = culsh_sgd_step(*args, tile_b=tile, bce=bce)
+    want = culsh_sgd_step_ref(*args, bce=bce)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_culsh_sgd_invalid_rows_untouched():
+    args = _culsh_args(16, 8, 4, np.random.default_rng(0))
+    args = args[:11] + (jnp.zeros((16,), jnp.float32),) + args[12:]
+    got = culsh_sgd_step(*args)
+    for g, w in zip(got, (args[0], args[1], args[2], args[3], args[4], args[5])):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w))
 
 
 def test_mf_sgd_invalid_rows_untouched():

@@ -1,0 +1,172 @@
+"""Conflict-free scheduler + cached gathers + fast-path/kernel parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import model, sgd
+from repro.data.sparse import conflict_free_schedule, from_coo
+from repro.kernels.mf_sgd.ops import apply_culsh_sgd, apply_mf_sgd
+
+RNG = np.random.default_rng(0)
+
+
+def _check_schedule(rows, cols, sched):
+    """Every cf batch conflict-free; cf + leftover cover each triple once."""
+    rows, cols = np.asarray(rows), np.asarray(cols)
+    seen = []
+    for b in range(sched.cf_idx.shape[0]):
+        v = np.asarray(sched.cf_valid[b])
+        ids = np.asarray(sched.cf_idx[b])[v]
+        assert len(np.unique(rows[ids])) == len(ids), "row conflict"
+        assert len(np.unique(cols[ids])) == len(ids), "col conflict"
+        seen.append(ids)
+    for b in range(sched.lo_idx.shape[0]):
+        v = np.asarray(sched.lo_valid[b])
+        seen.append(np.asarray(sched.lo_idx[b])[v])
+    seen = np.concatenate(seen) if seen else np.zeros((0,), np.int64)
+    assert sorted(seen.tolist()) == list(range(len(rows))), "not an exact cover"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(5, 200), st.integers(3, 60), st.integers(16, 256),
+       st.integers(0, 10**6))
+def test_schedule_conflict_free_exact_cover(M, N, batch, seed):
+    rng = np.random.default_rng(seed)
+    nnz = min(M * N, int(rng.integers(1, 4 * (M + N))))
+    pairs = rng.choice(M * N, size=nnz, replace=False)
+    rows = (pairs // N).astype(np.int32)
+    cols = (pairs % N).astype(np.int32)
+    sched = conflict_free_schedule(rows, cols, batch=batch, seed=seed)
+    _check_schedule(rows, cols, sched)
+
+
+def test_schedule_zipf_dataset(tiny_sparse):
+    sp = tiny_sparse
+    sched = conflict_free_schedule(np.asarray(sp.rows), np.asarray(sp.cols),
+                                   batch=128, seed=0)
+    _check_schedule(sp.rows, sp.cols, sched)
+    st_ = sched.stats()
+    # zipf heads overflow to leftovers, but the bulk must be conflict-free
+    assert st_["cf_frac"] > 0.5
+    assert st_["n_cf"] + st_["n_lo"] == sp.nnz
+
+
+def test_assemble_cached_bit_identical(tiny_sparse):
+    sp = tiny_sparse
+    K = 8
+    JK = jnp.asarray(RNG.integers(0, sp.N, (sp.N, K)), jnp.int32)
+    cache = model.build_gather_cache(sp, JK, chunk=1000)  # force chunking
+    idx = jnp.asarray(RNG.permutation(sp.nnz)[:512], jnp.int32)
+    valid = jnp.asarray(RNG.integers(0, 2, 512), bool)
+    want = model.assemble(sp, JK, idx, valid)
+    got = model.assemble_cached(sp, JK, cache, idx, valid)
+    for f in ("i", "j", "r", "nb", "rnb", "expl", "impl", "valid"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)), err_msg=f)
+
+
+def _conflict_free_batch(sp, K, B=64, seed=0):
+    """A batch with each row/col at most once, assembled from real triples."""
+    rng = np.random.default_rng(seed)
+    rows, cols = np.asarray(sp.rows), np.asarray(sp.cols)
+    order = rng.permutation(sp.nnz)
+    take, ri, ci = [], set(), set()
+    for t in order:
+        if rows[t] not in ri and cols[t] not in ci:
+            take.append(t)
+            ri.add(rows[t])
+            ci.add(cols[t])
+        if len(take) == B:
+            break
+    idx = jnp.asarray(take, jnp.int32)
+    JK = jnp.asarray(rng.integers(0, sp.N, (sp.N, K)), jnp.int32)
+    return JK, idx, jnp.ones((len(take),), bool)
+
+
+def test_conflict_free_step_matches_scaled(tiny_sparse):
+    """On a conflict-free batch all collision counts are 1, so the fast
+    path must agree with the scaled path exactly."""
+    sp = tiny_sparse
+    JK, idx, valid = _conflict_free_batch(sp, K=4)
+    bt = model.assemble(sp, JK, idx, valid)
+    p = model.init_from_data(jax.random.PRNGKey(0), sp, 8, 4)
+    hp = sgd.Hyper()
+    d = jnp.float32(1.0)
+    for step in (sgd.culsh_step, sgd.mf_step):
+        fast = step(p, bt, hp, d, conflict_free=True)
+        scaled = step(p, bt, hp, d, conflict_free=False)
+        for leaf_f, leaf_s in zip(jax.tree.leaves(fast), jax.tree.leaves(scaled)):
+            np.testing.assert_allclose(np.asarray(leaf_f), np.asarray(leaf_s),
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_fused_kernel_matches_culsh_step(tiny_sparse):
+    sp = tiny_sparse
+    JK, idx, valid = _conflict_free_batch(sp, K=4)
+    bt = model.assemble(sp, JK, idx, valid)
+    p = model.init_from_data(jax.random.PRNGKey(1), sp, 8, 4)
+    hp = sgd.Hyper()
+    d = jnp.float32(0.7)
+    want = sgd.culsh_step(p, bt, hp, d, conflict_free=True)
+    for impl in ("ref", "pallas"):
+        got = apply_culsh_sgd(p, bt, hp, d, impl=impl, interpret=True)
+        for f in ("b", "bh", "U", "V", "W", "C"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+                rtol=1e-5, atol=1e-5, err_msg=f"{impl}:{f}")
+
+
+def test_mf_kernel_matches_mf_step(tiny_sparse):
+    sp = tiny_sparse
+    JK, idx, valid = _conflict_free_batch(sp, K=4, seed=3)
+    bt = model.assemble(sp, JK, idx, valid)
+    p = model.init_from_data(jax.random.PRNGKey(2), sp, 8, 4)
+    hp = sgd.Hyper()
+    d = jnp.float32(1.0)
+    want = sgd.mf_step(p, bt, hp, d, conflict_free=True)
+    for impl in ("ref", "pallas"):
+        got = apply_mf_sgd(p, bt.i, bt.j, bt.r, bt.valid, hp, d,
+                           impl=impl, interpret=True)
+        np.testing.assert_allclose(np.asarray(got.U), np.asarray(want.U),
+                                   rtol=1e-5, atol=1e-6, err_msg=impl)
+        np.testing.assert_allclose(np.asarray(got.V), np.asarray(want.V),
+                                   rtol=1e-5, atol=1e-6, err_msg=impl)
+
+
+def test_scheduled_epoch_learns_and_matches_unscheduled(tiny_sparse):
+    """train_epoch_scheduled drops the loss like train_epoch does, and the
+    kernel path is bit-identical to the jnp scheduled path on CPU."""
+    sp = tiny_sparse
+    K = 4
+    JK = jnp.asarray(RNG.integers(0, sp.N, (sp.N, K)), jnp.int32)
+    cache = model.build_gather_cache(sp, JK)
+    sched = conflict_free_schedule(np.asarray(sp.rows), np.asarray(sp.cols),
+                                   batch=128, seed=0)
+    hp = sgd.Hyper()
+    p0 = model.init_from_data(jax.random.PRNGKey(0), sp, 8, K)
+    copy = lambda p: jax.tree.map(jnp.copy, p)
+    key = jax.random.PRNGKey(1)
+
+    def sse(p):
+        pred, _ = model.predict(p, model.assemble(
+            sp, JK, jnp.arange(sp.nnz, dtype=jnp.int32),
+            jnp.ones((sp.nnz,), bool)))
+        return float(jnp.mean((sp.vals - pred) ** 2))
+
+    base = sse(p0)
+    p1 = p2 = None
+    for ep in range(2):
+        kk = jax.random.fold_in(key, ep)
+        ee = jnp.asarray(ep)
+        p1 = sgd.train_epoch_scheduled(copy(p0) if p1 is None else p1,
+                                       sp, JK, cache, sched, kk, ee, hp)
+        p2 = sgd.train_epoch_scheduled(copy(p0) if p2 is None else p2,
+                                       sp, JK, cache, sched, kk, ee, hp,
+                                       use_kernels=True, impl="ref")
+    assert sse(p1) < base
+    for l1, l2 in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-5, atol=1e-6)
