@@ -1,29 +1,40 @@
-"""Training-throughput benchmark: the PR-2 hot-path rebuild, measured.
+"""Training-throughput benchmark: the scheduled hot path, measured.
 
 Compares, per synthetic Zipf scale, steady-state epoch time (jit compile
-excluded via AOT `.lower().compile()`) and updates/sec for:
+excluded via AOT `.lower().compile()`; **min over epochs** — this
+container has noisy neighbours that inflate individual epochs 20–100%,
+and the min is the standard noise-robust estimator of achievable cost,
+applied identically to every path) and updates/sec for:
 
   * ``base``   — legacy `sgd.train_epoch`: per-batch B×K binary-search
     assembly + per-batch collision rescaling,
-  * ``sched``  — `sgd.train_epoch_scheduled`: per-fit neighbour-gather
-    cache + conflict-free schedule (scaled fallback for zipf-head
-    leftovers), params donated across epochs,
-  * ``kernel`` — same, with the fused `kernels/mf_sgd` step
-    (``impl="auto"``: pure-jnp ref on CPU, Pallas elsewhere).
+  * ``sched``  — `sgd.train_epoch_scheduled`: tiered conflict-free
+    schedule scanned over the schedule-ordered `ScheduledData`
+    (contiguous-slice assembly; scaled fallback for the zipf-head
+    residue), params donated across epochs,
+  * ``kernel`` — same, with the fused `kernels/mf_sgd` step on every
+    conflict-free tier (``impl="auto"``: pure-jnp ref on CPU, Pallas
+    elsewhere).
 
 Also trains both paths for equal epochs from the same init and reports the
-held-out RMSE of each, so the speedup is shown not to cost accuracy.
-Results land in ``BENCH_train.json`` at the repo root (see --out).
+held-out RMSE of each (via the per-fit `EvalCache` gather scan), so the
+speedup is shown not to cost accuracy.  Results land in
+``BENCH_train.json`` at the repo root (see --out).
 
     PYTHONPATH=src:. python benchmarks/bench_train.py [--scales small,medium,large]
-        [--epochs 5] [--smoke] [--out BENCH_train.json]
+        [--epochs 5] [--smoke] [--check] [--out BENCH_train.json]
+
+``--check`` is the CI regression gate: it asserts the BENCH_train.json
+floors (tiered cf_frac ≥ 0.8 everywhere; sched ≥ 2× the legacy path at
+the recorded scales, ≥ 1.5× at smoke scale — see CHECK_SPEEDUP_SMOKE)
+after the run and exits non-zero on regression.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
-import statistics
+import sys
 import time
 
 import jax
@@ -37,18 +48,32 @@ from repro.data.sparse import conflict_free_schedule, from_coo, train_test_split
 from repro.kernels.mf_sgd.ops import resolve_impl
 
 SCALES = {
-    # name: (M, N, nnz, cf_batch)   — zipf-tailed via synthetic.generate
-    "smoke": (400, 100, 6_000, 96),
-    "small": (1_500, 300, 60_000, 256),
-    "medium": (3_000, 500, 150_000, 512),
-    "large": (8_000, 2_000, 600_000, 1_024),
+    # name: (M, N, nnz, cf_batch, tiers, tier_shrink) — zipf-tailed via
+    # synthetic.generate.  Schedule knobs are the measured per-scale sweet
+    # spots: tier-0 width ≈ min(M, N) (widest steps amortize the fixed
+    # per-step scatter cost), a ~quarter-octave shrink (0.71) so emitted
+    # rounds are ≥71% full (cf_fill ≈ 0.89 vs 0.77 with plain halving),
+    # and enough tiers that the deep zipf tail stays conflict-free
+    # (cf_frac ≥ 0.85) instead of spilling to the scaled path.
+    "smoke": (400, 100, 6_000, 96, 6, 0.71),
+    "small": (1_500, 300, 60_000, 300, 7, 0.71),
+    "medium": (3_000, 500, 150_000, 512, 7, 0.71),
+    "large": (8_000, 2_000, 600_000, 2_048, 9, 0.71),
 }
 F, K = 32, 16
 BATCH = 4096          # legacy-path batch (the trainer default)
+# --check floors (ISSUE 3 / CI gate).  cf_frac is deterministic per seed;
+# the wall-clock floor is 2.0 at the recorded bench scales but relaxed at
+# smoke scale, where the legacy path is overhead-dominated (2 batches per
+# epoch) and its structural speedup sits at ~2x — a 2.0 smoke floor would
+# gate CI on noisy-neighbour luck, not on regressions.
+CHECK_CF_FRAC = 0.8
+CHECK_SPEEDUP = 2.0
+CHECK_SPEEDUP_SMOKE = 1.5
 
 
 def setup(name: str, seed: int = 0):
-    M, N, nnz, cf_batch = SCALES[name]
+    M, N, nnz, cf_batch, _tiers, _shrink = SCALES[name]
     spec = dataclasses.replace(syn.MOVIELENS_LIKE, M=M, N=N, nnz=nnz)
     rows, cols, vals, _ = syn.generate(spec, seed=seed)
     rng = np.random.default_rng(seed)
@@ -61,7 +86,7 @@ def setup(name: str, seed: int = 0):
                                    band_cap=lsh.band_cap)
     params = model.init_from_data(jax.random.fold_in(key, 2), sp, F, K)
     jax.block_until_ready(JK)
-    return sp, JK, params, te, cf_batch
+    return sp, JK, params, te, cf_batch, _tiers, _shrink
 
 
 def run_epochs(compiled, run_args, params, epochs: int):
@@ -76,14 +101,17 @@ def run_epochs(compiled, run_args, params, epochs: int):
 
 
 def bench_scale(name: str, *, epochs: int, seed: int = 0) -> dict:
-    sp, JK, params0, te, cf_batch = setup(name, seed)
+    sp, JK, params0, te, cf_batch, tiers, shrink = setup(name, seed)
     te_r, te_c, te_v = (jnp.asarray(a) for a in te)
     hp = sgd.Hyper()
     k_ep = jax.random.PRNGKey(seed + 17)
     keys = lambda ep: jax.random.fold_in(k_ep, ep)
     copy = lambda p: jax.tree.map(jnp.copy, p)
     out = dict(name=name, M=sp.M, N=sp.N, nnz=sp.nnz, F=F, K=K,
-               batch=BATCH, cf_batch=cf_batch, epochs=epochs)
+               batch=BATCH, cf_batch=cf_batch, tiers=tiers,
+               tier_shrink=shrink, epochs=epochs)
+    ec = model.build_eval_cache(sp, JK, te_r, te_c)
+    ev = lambda p: float(model.rmse_cached(p, ec, te_r, te_c, te_v))
 
     # --- base: legacy per-batch-search path -------------------------------
     t0 = time.perf_counter()
@@ -93,43 +121,57 @@ def bench_scale(name: str, *, epochs: int, seed: int = 0) -> dict:
     p_base, times = run_epochs(
         base_fn, lambda ep: (sp, JK, keys(ep), jnp.asarray(ep), hp),
         copy(params0), epochs)
-    sec = statistics.median(times)
+    sec = min(times)
     out["base"] = dict(sec_per_epoch=sec, updates_per_sec=sp.nnz / sec,
-                       compile_sec=compile_base,
-                       rmse=float(model.rmse(p_base, sp, JK, te_r, te_c, te_v)))
+                       compile_sec=compile_base, rmse=ev(p_base))
     emit(f"train.base.{name}", sec, f"ups={sp.nnz / sec:,.0f}")
 
-    # --- scheduled + cached gathers (± fused kernels) ---------------------
+    # --- tiered schedule + schedule-ordered data (± fused kernels) --------
     t0 = time.perf_counter()
-    cache = model.build_gather_cache(sp, JK)
     sched = conflict_free_schedule(np.asarray(sp.rows), np.asarray(sp.cols),
-                                   batch=cf_batch, seed=seed)
-    jax.block_until_ready(cache.rnb)
+                                   batch=cf_batch, tiers=tiers,
+                                   tier_shrink=shrink,
+                                   M=sp.M, N=sp.N, seed=seed)
+    sd = model.build_scheduled_data(sp, JK, sched)
+    jax.block_until_ready(sd.r)
     prep = time.perf_counter() - t0
-    out["schedule"] = dict(prep_sec=prep, **sched.stats())
+    out["schedule"] = dict(prep_sec=prep, prep_per_epoch=prep / epochs,
+                           **sched.stats())
 
     for label, use_kernels in (("sched", False), ("kernel", True)):
         impl = resolve_impl("auto") if use_kernels else "ref"
         t0 = time.perf_counter()
         fn = sgd.train_epoch_scheduled.lower(
-            params0, sp, JK, cache, sched, keys(0), jnp.asarray(0), hp,
+            params0, sd, sched, keys(0), jnp.asarray(0), hp,
             use_kernels=use_kernels, impl=impl,
             interpret=jax.default_backend() == "cpu").compile()
         compile_sec = time.perf_counter() - t0
         p_end, times = run_epochs(
-            fn, lambda ep: (sp, JK, cache, sched, keys(ep), jnp.asarray(ep), hp),
+            fn, lambda ep: (sd, sched, keys(ep), jnp.asarray(ep), hp),
             copy(params0), epochs)
-        sec = statistics.median(times)
-        out[label] = dict(
-            sec_per_epoch=sec, updates_per_sec=sp.nnz / sec,
-            compile_sec=compile_sec,
-            rmse=float(model.rmse(p_end, sp, JK, te_r, te_c, te_v)))
+        sec = min(times)
+        out[label] = dict(sec_per_epoch=sec, updates_per_sec=sp.nnz / sec,
+                          compile_sec=compile_sec, rmse=ev(p_end))
         emit(f"train.{label}.{name}", sec,
              f"ups={sp.nnz / sec:,.0f};speedup={out['base']['sec_per_epoch'] / sec:.2f}x")
 
     out["speedup_sched"] = out["base"]["sec_per_epoch"] / out["sched"]["sec_per_epoch"]
     out["speedup_kernel"] = out["base"]["sec_per_epoch"] / out["kernel"]["sec_per_epoch"]
     return out
+
+
+def check(results) -> list[str]:
+    """Regression gate against the BENCH_train.json floors."""
+    fails = []
+    for r in results:
+        cf = r["schedule"]["cf_frac"]
+        floor = CHECK_SPEEDUP_SMOKE if r["name"] == "smoke" else CHECK_SPEEDUP
+        if cf < CHECK_CF_FRAC:
+            fails.append(f"{r['name']}: cf_frac {cf:.3f} < {CHECK_CF_FRAC}")
+        if r["speedup_sched"] < floor:
+            fails.append(f"{r['name']}: speedup_sched "
+                         f"{r['speedup_sched']:.2f} < {floor}")
+    return fails
 
 
 def main(argv=None):
@@ -140,10 +182,16 @@ def main(argv=None):
     ap.add_argument("--out", default="BENCH_train.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config + 2 epochs (CI gate; still writes --out)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert speedup/cf_frac floors after the run "
+                         "(exit 1 on regression)")
     args = ap.parse_args(argv)
 
     scales = ["smoke"] if args.smoke else [s for s in args.scales.split(",") if s]
-    epochs = 2 if args.smoke else args.epochs
+    # --check under --smoke gates CI on a wall-clock floor: min-of-2 epochs
+    # has almost no rejection against this box's noisy neighbours, so give
+    # the gate 5 epochs (smoke epochs are ~10 ms; compiles dominate anyway)
+    epochs = (5 if args.check else 2) if args.smoke else args.epochs
     results = []
     for name in scales:
         results.append(bench_scale(name, epochs=epochs, seed=args.seed))
@@ -152,8 +200,10 @@ def main(argv=None):
         benchmark="bench_train",
         backend=jax.default_backend(),
         jax_version=jax.__version__,
-        protocol=dict(epochs=epochs, timing="median sec/epoch, AOT-compiled "
-                      "(compile excluded), donated params"),
+        protocol=dict(epochs=epochs, timing="min sec/epoch over the run "
+                      "(noise-robust on shared boxes), AOT-compiled "
+                      "(compile excluded), donated params, tiered "
+                      "conflict-free schedule"),
         scales=results,
     )
     with open(args.out, "w") as f:
@@ -161,14 +211,27 @@ def main(argv=None):
         f.write("\n")
 
     for r in results:
+        st = r["schedule"]
         print(f"# {r['name']}: M={r['M']} N={r['N']} nnz={r['nnz']} | "
               f"base {r['base']['sec_per_epoch']:.3f}s/ep | "
               f"sched {r['sched']['sec_per_epoch']:.3f}s/ep "
-              f"({r['speedup_sched']:.2f}x) | "
+              f"({r['speedup_sched']:.2f}x, cf={st['cf_frac']:.2f}) | "
               f"kernel {r['kernel']['sec_per_epoch']:.3f}s/ep "
               f"({r['speedup_kernel']:.2f}x) | rmse "
               f"{r['base']['rmse']:.4f}/{r['sched']['rmse']:.4f}/"
               f"{r['kernel']['rmse']:.4f}")
+
+    if args.check:
+        fails = check(results)
+        for f_ in fails:
+            print(f"CHECK FAIL: {f_}", file=sys.stderr)
+        if fails:
+            sys.exit(1)
+        floors = ",".join(
+            str(CHECK_SPEEDUP_SMOKE if n == "smoke" else CHECK_SPEEDUP)
+            for n in scales)
+        print(f"# check passed: cf_frac ≥ {CHECK_CF_FRAC}, "
+              f"speedup_sched ≥ {floors} on {','.join(scales)}")
     return results
 
 

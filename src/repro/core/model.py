@@ -84,55 +84,78 @@ def assemble(sp: SparseMatrix, JK: jax.Array, idx: jax.Array,
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class NeighbourCache:
-    """Per-triple neighbour gathers, precomputed once per fit.
+class ScheduledData:
+    """Training data laid out in `EpochSchedule` order (once per fit).
 
-    Ω and J^K are fixed for a whole offline fit, so the [B, K] binary-search
-    rating lookup `assemble` does per batch is the same work re-done every
-    epoch.  This caches ``r_{i, JK[j]}`` and the explicit-slot mask for all
-    nnz triples up front; `assemble_cached` then reduces batch assembly to
-    plain `take` gathers.  The Alg.-4 online path keeps the search
-    (`assemble` with ``lookup_sp``) because there Ω̂ differs from the
-    sampled ΔΩ triples.
+    Every batch of every schedule tier is a contiguous window of these
+    arrays, so batch assembly is a `dynamic_slice` + the schedule's valid
+    mask — no per-batch gather at all (`slice_batch`).  Arrays are padded
+    by ``sched.pad_width`` slots past nnz so a window that reads past the
+    last batch's fill stays in bounds (the overread is masked).
+
+    For ``mf_only`` fits the neighbour planes are built zero-width: the
+    MF step never reads them and the [nnz, K] cache memory is skipped.
     """
 
-    rnb: jax.Array   # [nnz, K] float32 — r_{i, nb} (0 where unobserved)
-    expl: jax.Array  # [nnz, K] float32 — 1 where nb ∈ R^K(i;j)
+    i: jax.Array     # [P] int32 row ids
+    j: jax.Array     # [P] int32 col ids
+    r: jax.Array     # [P] float32 ratings
+    nb: jax.Array    # [P, K] int32 neighbour ids (J^K[j])
+    rnb: jax.Array   # [P, K] float32 r_{i, nb} (0 where unobserved)
+    expl: jax.Array  # [P, K] float32 explicit-slot mask
 
 
-def build_gather_cache(sp: SparseMatrix, JK: jax.Array, *,
-                       chunk: int = 65536) -> NeighbourCache:
-    """One lookup sweep over all triples → NeighbourCache (chunked so the
-    [chunk, K, log nnz] search intermediates stay off the high-water mark)."""
+def build_scheduled_data(sp: SparseMatrix, JK: jax.Array, sched, *,
+                         mf_only: bool = False,
+                         chunk: int = 65536) -> ScheduledData:
+    """One binary-search sweep over the schedule-ordered triples →
+    `ScheduledData` (chunked so the [chunk, K, log nnz] search
+    intermediates stay off the high-water mark; written in schedule order
+    directly so no second permutation pass is needed)."""
+    order = sched.order
+    pad = sched.pad_width
+    padded = lambda a: jnp.concatenate(
+        [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
+    i = padded(sp.rows[order])
+    j = padded(sp.cols[order])
+    r = padded(sp.vals[order])
+    if mf_only:
+        z2 = jnp.zeros((i.shape[0], 0), jnp.float32)
+        return ScheduledData(i, j, r, z2.astype(jnp.int32), z2, z2)
     K = JK.shape[1]
+    nb = JK[sp.cols[order]]
     rnb_parts, expl_parts = [], []
     for c0 in range(0, sp.nnz, chunk):
-        i = sp.rows[c0:c0 + chunk]
-        nb = JK[sp.cols[c0:c0 + chunk]]
-        rnb, hit = lookup(sp, jnp.broadcast_to(i[:, None], nb.shape), nb)
+        ii = sp.rows[order[c0:c0 + chunk]]
+        nn = nb[c0:c0 + chunk]
+        rnb, hit = lookup(sp, jnp.broadcast_to(ii[:, None], nn.shape), nn)
         rnb_parts.append(rnb)
         expl_parts.append(hit.astype(jnp.float32))
-    if not rnb_parts:
-        z = jnp.zeros((0, K), jnp.float32)
-        return NeighbourCache(z, z)
-    return NeighbourCache(jnp.concatenate(rnb_parts),
-                          jnp.concatenate(expl_parts))
+    z = jnp.zeros((0, K), jnp.float32)
+    rnb = jnp.concatenate(rnb_parts) if rnb_parts else z
+    expl = jnp.concatenate(expl_parts) if expl_parts else z
+    return ScheduledData(i, j, r, padded(nb), padded(rnb), padded(expl))
 
 
-def assemble_cached(sp: SparseMatrix, JK: jax.Array, cache: NeighbourCache,
-                    idx: jax.Array, valid: jax.Array) -> Batch:
-    """`assemble` with the rating lookups replaced by cache gathers —
-    bit-identical output, O(K) instead of O(K log nnz) per sample."""
-    i, j, r = sp.rows[idx], sp.cols[idx], sp.vals[idx]
-    expl = cache.expl[idx]
-    return Batch(i, j, r, JK[j], cache.rnb[idx], expl, 1.0 - expl,
-                 valid.astype(jnp.float32))
+def slice_batch(sd: ScheduledData, start: jax.Array, width: int,
+                valid: jax.Array) -> Batch:
+    """Assemble a schedule-window batch: contiguous slices, zero gathers."""
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, width, axis=0)
+    expl = sl(sd.expl)
+    return Batch(sl(sd.i), sl(sd.j), sl(sd.r), sl(sd.nb), sl(sd.rnb),
+                 expl, 1.0 - expl, valid.astype(jnp.float32))
 
 
-def predict(p: Params, bt: Batch):
-    """Eq. (1). Returns (pred [B], aux) with aux reused by the manual SGD."""
+def predict(p: Params, bt: Batch, bh_nb: jax.Array | None = None):
+    """Eq. (1). Returns (pred [B], aux) with aux reused by the manual SGD.
+
+    ``bh_nb`` optionally substitutes pre-gathered neighbour baselines
+    b̂[nb] — the shard-tier scan passes an epoch-start snapshot because
+    neighbour cols cross device block boundaries (cuMF-style stale read;
+    b̂ drifts one epoch at most)."""
     bbar = p.mu + p.b[bt.i] + p.bh[bt.j]                    # [B]
-    bbar_nb = p.mu + p.b[bt.i][:, None] + p.bh[bt.nb]       # [B, K]
+    bh_of_nb = p.bh[bt.nb] if bh_nb is None else bh_nb
+    bbar_nb = p.mu + p.b[bt.i][:, None] + bh_of_nb          # [B, K]
     resid = (bt.rnb - bbar_nb) * bt.expl                    # [B, K]
     nR = jnp.sum(bt.expl, 1)
     nN = jnp.sum(bt.impl, 1)
@@ -149,6 +172,70 @@ def predict(p: Params, bt: Batch):
 def predict_mf(p: Params, bt: Batch):
     """Plain-MF prediction (the CUSGD++ model): r̂ = u_i·v_j."""
     return jnp.sum(p.U[bt.i] * p.V[bt.j], 1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EvalCache:
+    """Test-set neighbour gathers, precomputed once per fit.
+
+    `rmse` re-runs the [B, K] binary-search rating lookup against the
+    train matrix on every eval — but the test triples and J^K are fixed
+    for the whole fit, so it is the same work re-done every epoch (the
+    `ScheduledData` trick applied to the eval loop).  `rmse_cached` then
+    reduces per-epoch eval to plain slices."""
+
+    nb: jax.Array    # [T, K] int32 — J^K[test cols]
+    rnb: jax.Array   # [T, K] float32 — r_{i, nb} from the *train* matrix
+    expl: jax.Array  # [T, K] float32
+
+
+def build_eval_cache(sp_train: SparseMatrix, JK: jax.Array, rows, cols, *,
+                     mf_only: bool = False, chunk: int = 65536) -> EvalCache:
+    """One lookup sweep over the test triples → EvalCache."""
+    if mf_only:   # MF never reads neighbour slots — zero-width planes
+        z = jnp.zeros((rows.shape[0], 0), jnp.float32)
+        return EvalCache(z.astype(jnp.int32), z, z)
+    nb_parts, rnb_parts, expl_parts = [], [], []
+    for c0 in range(0, int(rows.shape[0]), chunk):
+        i = rows[c0:c0 + chunk]
+        nb = JK[cols[c0:c0 + chunk]]
+        rnb, hit = lookup(sp_train, jnp.broadcast_to(i[:, None], nb.shape), nb)
+        nb_parts.append(nb)
+        rnb_parts.append(rnb)
+        expl_parts.append(hit.astype(jnp.float32))
+    z = jnp.zeros((0, JK.shape[1]), jnp.float32)
+    cat = lambda ps, zz: jnp.concatenate(ps) if ps else zz
+    return EvalCache(cat(nb_parts, z.astype(jnp.int32)),
+                     cat(rnb_parts, z), cat(expl_parts, z))
+
+
+@partial(jax.jit, static_argnames=("batch", "mf_only"))
+def rmse_cached(p: Params, ec: EvalCache, rows, cols, vals, *,
+                batch: int = 8192, mf_only: bool = False):
+    """Test RMSE (Eq. 6) from the per-fit `EvalCache` — per-epoch eval is
+    a scan of plain slices, no binary search."""
+    n = rows.shape[0]
+    nb_batches = max(1, -(-n // batch))
+    pad = nb_batches * batch - n
+    padv = lambda a: jnp.concatenate(
+        [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
+    rows_p, cols_p, vals_p = padv(rows), padv(cols), padv(vals)
+    nb_p, rnb_p, expl_p = padv(ec.nb), padv(ec.rnb), padv(ec.expl)
+    valid = (jnp.arange(nb_batches * batch) < n).astype(jnp.float32)
+
+    def body(carry, s):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, s, batch, axis=0)
+        expl = sl(expl_p)
+        r = sl(vals_p)
+        v = sl(valid)
+        bt = Batch(sl(rows_p), sl(cols_p), r, sl(nb_p), sl(rnb_p),
+                   expl, 1.0 - expl, v)
+        pred = predict_mf(p, bt) if mf_only else predict(p, bt)[0]
+        return carry + jnp.sum((r - pred) ** 2 * v), None
+
+    sse, _ = jax.lax.scan(body, 0.0, jnp.arange(nb_batches) * batch)
+    return jnp.sqrt(sse / n)
 
 
 @partial(jax.jit, static_argnames=("batch", "mf_only"))

@@ -15,9 +15,10 @@ Two epoch drivers:
 
 * ``train_epoch``            — general case: binary-search batch assembly +
   collision rescaling every batch (also the Alg.-4 online building block).
-* ``train_epoch_scheduled``  — offline hot path: per-fit `NeighbourCache`
-  gathers + `EpochSchedule` conflict-free batches (+ optional fused Pallas
-  kernels), with params donated across epochs.  See bench_train.py.
+* ``train_epoch_scheduled``  — offline hot path: contiguous-slice assembly
+  from the schedule-ordered `ScheduledData`, width-tiered conflict-free
+  scans (+ optional fused Pallas kernels), an optional shard_map
+  block-rotation tier, params donated across epochs.  See bench_train.py.
 """
 from __future__ import annotations
 
@@ -27,8 +28,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.model import (Batch, NeighbourCache, Params, assemble,
-                              assemble_cached, predict, predict_mf)
+from repro.core.model import (Batch, Params, ScheduledData, assemble,
+                              predict, predict_mf, slice_batch)
 from repro.data.sparse import EpochSchedule, SparseMatrix, epoch_batches
 from repro.kernels.mf_sgd.ops import apply_culsh_sgd, apply_mf_sgd
 
@@ -104,13 +105,16 @@ def mf_step(p: Params, bt: Batch, hp: Hyper, decay, bce: bool = False,
 
 
 def culsh_step(p: Params, bt: Batch, hp: Hyper, decay,
-               bce: bool = False, conflict_free: bool = False) -> Params:
+               bce: bool = False, conflict_free: bool = False,
+               bh_nb: jax.Array | None = None) -> Params:
     """CULSH-MF: the fused Eq. (5) update of {b, b̂, U, V, W, C}.
 
     With ``conflict_free`` (static) the batch is promised to touch each i
     and each j at most once (the D×D-block invariant), making the summed
-    scatter exactly the parallel Eq. (5) with no rescaling."""
-    pred, aux = predict(p, bt)
+    scatter exactly the parallel Eq. (5) with no rescaling.  ``bh_nb``
+    optionally substitutes pre-gathered neighbour baselines (see
+    `model.predict` — the shard-tier stale-read)."""
+    pred, aux = predict(p, bt, bh_nb=bh_nb)
     e = _error(bt.r, pred, bce) * bt.valid
     vmask = bt.valid[:, None]
     ui, vj = p.U[bt.i], p.V[bt.j]
@@ -159,27 +163,164 @@ def train_epoch(p: Params, sp: SparseMatrix, JK: jax.Array, key: jax.Array,
     return p
 
 
+def _cf_scan(p: Params, sd: ScheduledData, starts, valid, hp, decay, *,
+             width: int, mf_only: bool, bce: bool, conflict_free: bool,
+             use_kernels: bool, impl: str, interpret: bool, tile_b: int,
+             bh_nb_src: jax.Array | None = None) -> Params:
+    """Scan one schedule tier: contiguous window assembly + fused step.
+
+    ``bh_nb_src`` (an epoch-start b̂ snapshot) switches the neighbour
+    baselines to the shard-tier stale-read semantics — the single-device
+    replay of a block-aligned tier must match `jax.shard_map` bit-for-bit,
+    and under sharding the live b̂ of other devices' col blocks simply
+    does not exist locally."""
+
+    valid = valid.astype(jnp.float32)   # once per tier, not per scan step
+
+    def body(pp, sv):
+        s, val = sv
+        bt = slice_batch(sd, s, width, val)
+        bh_nb = None if bh_nb_src is None else bh_nb_src[bt.nb]
+        if use_kernels and conflict_free and bh_nb is None:
+            if mf_only:
+                pp = apply_mf_sgd(pp, bt.i, bt.j, bt.r, bt.valid, hp, decay,
+                                  impl=impl, tile_b=tile_b,
+                                  interpret=interpret, bce=bce)
+            else:
+                pp = apply_culsh_sgd(pp, bt, hp, decay, impl=impl,
+                                     tile_b=tile_b, interpret=interpret,
+                                     bce=bce)
+        elif mf_only:
+            pp = mf_step(pp, bt, hp, decay, bce, conflict_free=conflict_free)
+        else:
+            pp = culsh_step(pp, bt, hp, decay, bce,
+                            conflict_free=conflict_free, bh_nb=bh_nb)
+        return pp, None
+
+    p, _ = jax.lax.scan(body, p, (starts, valid))
+    return p
+
+
+def _shard_round_shuffle(sched: EpochSchedule, key: jax.Array):
+    """Per-epoch round permutation for the block-aligned tier.
+
+    Rounds are permuted *within* each sub-epoch, identically across
+    devices: batches at the same (s, r) touch disjoint blocks by
+    construction, so any common round order preserves both
+    conflict-freedom and single-device/shard-map parity."""
+    D, S, R = sched.shard_starts.shape
+    if R == 0:
+        return sched.shard_starts, sched.shard_valid
+    perms = jax.vmap(lambda k: jax.random.permutation(k, R))(
+        jax.random.split(key, S))                      # [S, R]
+    starts = jnp.take_along_axis(sched.shard_starts, perms[None], axis=2)
+    valid = jnp.take_along_axis(
+        sched.shard_valid, perms[None, :, :, None], axis=2)
+    return starts, valid
+
+
+def _sharded_tier(p: Params, sd: ScheduledData, sched: EpochSchedule,
+                  starts, valid, hp: Hyper, decay, mesh, *,
+                  mf_only: bool, bce: bool) -> Params:
+    """Run the block-aligned tier under `jax.shard_map` (cuMF rotation).
+
+    Device ``d`` scans sub-epoch ``s``'s rounds for block ``((d+s)%D, d)``:
+    V/b̂/W/C col blocks stay put, U/b row blocks ring-rotate once per
+    sub-epoch (`ppermute` — the only collective; no psum anywhere, and
+    after D rotations every row block is back home so the out-specs
+    reassemble the params positionally).  The schedule data stays
+    replicated (windows are cheap slices); neighbour baselines b̂[nb] use
+    the epoch-start snapshot ``bh0`` since neighbour cols cross block
+    boundaries.  Params must be padded to D·block_rows / D·block_cols.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    D = sched.shards
+    mB, nB = sched.block_rows, sched.block_cols
+    Wsh = sched.shard_width
+    bh0 = p.bh
+    blocks = lambda a, nb: a.reshape((D, nb) + a.shape[1:])
+
+    def device_fn(Ub, bb, Vb, bhb, Wb, Cb, mu, bh0, decay, starts_d, valid_d):
+        d = jax.lax.axis_index("shard")
+        Ub, bb, Vb, bhb, Wb, Cb = (a[0] for a in (Ub, bb, Vb, bhb, Wb, Cb))
+        starts_d, valid_d = starts_d[0], valid_d[0]
+        col0 = d * nB
+
+        def make_step(row0):
+            def step(carry, sv):
+                Ub, bb, Vb, bhb, Wb, Cb = carry
+                s, val = sv
+                bt = slice_batch(sd, s, Wsh, val)
+                ok = ((bt.i >= row0) & (bt.i < row0 + mB)
+                      & (bt.j >= col0) & (bt.j < col0 + nB))
+                bt = dataclasses.replace(
+                    bt, i=jnp.clip(bt.i - row0, 0, mB - 1),
+                    j=jnp.clip(bt.j - col0, 0, nB - 1),
+                    valid=bt.valid * ok)
+                pl = Params(U=Ub, V=Vb, b=bb, bh=bhb, W=Wb, C=Cb, mu=mu)
+                if mf_only:
+                    pl = mf_step(pl, bt, hp, decay, bce, conflict_free=True)
+                else:
+                    pl = culsh_step(pl, bt, hp, decay, bce,
+                                    conflict_free=True, bh_nb=bh0[bt.nb])
+                return (pl.U, pl.b, pl.V, pl.bh, pl.W, pl.C), None
+            return step
+
+        ring = [(i, (i - 1) % D) for i in range(D)]
+        for s in range(D):
+            row0 = ((d + s) % D) * mB
+            (Ub, bb, Vb, bhb, Wb, Cb), _ = jax.lax.scan(
+                make_step(row0), (Ub, bb, Vb, bhb, Wb, Cb),
+                (starts_d[s], valid_d[s]))
+            Ub = jax.lax.ppermute(Ub, "shard", ring)
+            bb = jax.lax.ppermute(bb, "shard", ring)
+        return tuple(a[None] for a in (Ub, bb, Vb, bhb, Wb, Cb))
+
+    sh = lambda *rest: P("shard", *rest)
+    fn = shard_map(
+        device_fn, mesh=mesh,
+        in_specs=(sh(None, None), sh(None), sh(None, None), sh(None),
+                  sh(None, None), sh(None, None), P(), P(), P(),
+                  sh(None, None), sh(None, None, None)),
+        out_specs=(sh(None, None), sh(None), sh(None, None), sh(None),
+                   sh(None, None), sh(None, None)))
+    U, b, V, bh, W, C = fn(blocks(p.U, mB), blocks(p.b, mB),
+                           blocks(p.V, nB), blocks(p.bh, nB),
+                           blocks(p.W, nB), blocks(p.C, nB),
+                           p.mu, bh0, decay, starts, valid)
+    unb = lambda a: a.reshape((-1,) + a.shape[2:])
+    return Params(U=unb(U), V=unb(V), b=unb(b), bh=unb(bh),
+                  W=unb(W), C=unb(C), mu=p.mu)
+
+
 @partial(jax.jit,
          static_argnames=("mf_only", "bce", "use_kernels", "impl",
-                          "interpret", "tile_b"),
+                          "interpret", "tile_b", "mesh"),
          donate_argnames=("p",))
-def train_epoch_scheduled(p: Params, sp: SparseMatrix, JK: jax.Array,
-                          cache: NeighbourCache, sched: EpochSchedule,
-                          key: jax.Array, epoch: jax.Array, hp: Hyper, *,
+def train_epoch_scheduled(p: Params, sd: ScheduledData,
+                          sched: EpochSchedule, key: jax.Array,
+                          epoch: jax.Array, hp: Hyper, *,
                           mf_only: bool = False, bce: bool = False,
                           use_kernels: bool = False, impl: str = "ref",
-                          interpret: bool = True,
-                          tile_b: int = 256) -> Params:
-    """One epoch over a precomputed conflict-free schedule + gather cache.
+                          interpret: bool = True, tile_b: int = 256,
+                          mesh=None) -> Params:
+    """One epoch over a tiered conflict-free schedule (the offline hot path).
 
-    The optimized hot path (cf. cuMF_SGD's conflict-free fine-grained SGD):
+    cuMF_SGD's conflict-free fine-grained SGD, tiered and laid out for the
+    compiler:
 
-    * batch assembly is plain `take` gathers from the per-fit
-      `NeighbourCache` — no B×K binary search per batch;
-    * conflict-free batches run the exact Eq. (5) step with no collision
-      rescaling, optionally through the fused `kernels/mf_sgd` step
-      (``use_kernels``; ``impl`` pre-resolved via `ops.resolve_impl` —
-      resolution needs the backend, so it cannot happen under jit);
+    * batch assembly is a contiguous `dynamic_slice` of the schedule-
+      ordered `ScheduledData` — no per-batch gather or binary search;
+    * the block-aligned shard tier (if `sched.shards > 1`) runs first —
+      under `jax.shard_map` over ``mesh`` when given, otherwise replayed
+      sequentially in the identical (s, r, d) order (exact parity: the D
+      batches of a step touch disjoint parameter blocks);
+    * each width tier is one `lax.scan` of exact Eq. (5) steps (static
+      shapes per tier), optionally through the fused `kernels/mf_sgd`
+      step (``use_kernels``; ``impl`` pre-resolved via `ops.resolve_impl`
+      outside jit, tile auto-clamped to the tier width);
     * leftover batches (zipf heads) fall back to the scaled summed step;
     * ``p`` is donated so parameters update in place across epochs.
 
@@ -187,37 +328,42 @@ def train_epoch_scheduled(p: Params, sp: SparseMatrix, JK: jax.Array,
     under batch permutation); within-batch composition is fixed per fit.
     """
     decay = lr_decay(hp, epoch)
-    k_cf, k_lo = jax.random.split(key)
+    keys = jax.random.split(key, 2 + len(sched.tier_starts))
+    kw = dict(mf_only=mf_only, bce=bce, use_kernels=use_kernels, impl=impl,
+              interpret=interpret)
 
-    def cf_body(pp, ib):
-        bidx, bvalid = ib
-        bt = assemble_cached(sp, JK, cache, bidx, bvalid)
-        if use_kernels and mf_only:
-            pp = apply_mf_sgd(pp, bt.i, bt.j, bt.r, bt.valid, hp, decay,
-                              impl=impl, tile_b=tile_b, interpret=interpret,
-                              bce=bce)
-        elif use_kernels:
-            pp = apply_culsh_sgd(pp, bt, hp, decay, impl=impl, tile_b=tile_b,
-                                 interpret=interpret, bce=bce)
-        elif mf_only:
-            pp = mf_step(pp, bt, hp, decay, bce, conflict_free=True)
+    if sched.shard_starts.size:
+        starts, valid = _shard_round_shuffle(sched, keys[0])
+        if mesh is not None:
+            p = _sharded_tier(p, sd, sched, starts, valid, hp, decay, mesh,
+                              mf_only=mf_only, bce=bce)
         else:
-            pp = culsh_step(pp, bt, hp, decay, bce, conflict_free=True)
-        return pp, None
+            # same cells, same (s, r, d) order, same b̂ snapshot → parity
+            D, S, R = starts.shape
+            flat_s = jnp.transpose(starts, (1, 2, 0)).reshape(S * R * D)
+            flat_v = jnp.transpose(valid, (1, 2, 0, 3)).reshape(
+                S * R * D, sched.shard_width)
+            p = _cf_scan(p, sd, flat_s, flat_v, hp, decay,
+                         width=sched.shard_width, conflict_free=True,
+                         tile_b=tile_b,
+                         bh_nb_src=None if mf_only else p.bh,
+                         **kw | dict(use_kernels=False))
 
-    def lo_body(pp, ib):
-        bidx, bvalid = ib
-        bt = assemble_cached(sp, JK, cache, bidx, bvalid)
-        pp = (mf_step(pp, bt, hp, decay, bce) if mf_only
-              else culsh_step(pp, bt, hp, decay, bce))
-        return pp, None
+    for t, (starts, valid) in enumerate(zip(sched.tier_starts,
+                                            sched.tier_valid)):
+        if not starts.shape[0]:
+            continue
+        order = jax.random.permutation(keys[2 + t], starts.shape[0])
+        # tile_b passes through unclamped: kernel._clamp_tile aligns the
+        # tile to the batch rounded up to the sublane multiple, which a
+        # min() against a non-power-of-two tier width would defeat
+        p = _cf_scan(p, sd, starts[order], valid[order], hp, decay,
+                     width=sched.widths[t], conflict_free=True,
+                     tile_b=tile_b, **kw)
 
-    if sched.cf_idx.shape[0]:
-        order = jax.random.permutation(k_cf, sched.cf_idx.shape[0])
-        p, _ = jax.lax.scan(cf_body, p,
-                            (sched.cf_idx[order], sched.cf_valid[order]))
-    if sched.lo_idx.shape[0]:
-        order = jax.random.permutation(k_lo, sched.lo_idx.shape[0])
-        p, _ = jax.lax.scan(lo_body, p,
-                            (sched.lo_idx[order], sched.lo_valid[order]))
+    if sched.lo_starts.shape[0]:
+        order = jax.random.permutation(keys[1], sched.lo_starts.shape[0])
+        p = _cf_scan(p, sd, sched.lo_starts[order], sched.lo_valid[order],
+                     hp, decay, width=sched.widths[0], conflict_free=False,
+                     tile_b=tile_b, **kw | dict(use_kernels=False))
     return p

@@ -57,6 +57,43 @@ def from_coo(rows, cols, vals, shape) -> SparseMatrix:
     return SparseMatrix(rows[order], cols[order], vals[order], (M, N))
 
 
+def merge_coo(sp: SparseMatrix, rows, cols, vals,
+              shape: tuple[int, int]) -> SparseMatrix:
+    """Sorted-array union merge of Ω̂ and ΔΩ (host side).
+
+    The Alg.-4 online path used to rebuild `from_coo` per update — a full
+    O((n+d)·log(n+d)) re-sort of the merged matrix.  Since ``sp`` is
+    already (row, col)-lexsorted, merging d new triples only needs the
+    delta sorted plus two `searchsorted` passes: O(d·log d + d·log n) and
+    one linear scatter into the output.  ``shape`` may be larger than
+    ``sp.shape`` (grown id space); keys use the *new* N, which preserves
+    the lexicographic order of the old entries for any N ≥ max col + 1.
+    Assumes ΔΩ does not duplicate observed entries (new interactions);
+    equal keys land old-first.
+    """
+    M, N = shape
+    r0 = np.asarray(sp.rows, np.int64)
+    c0 = np.asarray(sp.cols, np.int64)
+    v0 = np.asarray(sp.vals)
+    rd = np.asarray(rows, np.int64)
+    cd = np.asarray(cols, np.int64)
+    vd = np.asarray(vals, np.float32)
+    k0 = r0 * N + c0
+    kd = rd * N + cd
+    o = np.argsort(kd, kind="stable")
+    rd, cd, vd, kd = rd[o], cd[o], vd[o], kd[o]
+    n, d = len(k0), len(kd)
+    out_r = np.empty(n + d, np.int32)
+    out_c = np.empty(n + d, np.int32)
+    out_v = np.empty(n + d, np.float32)
+    pos0 = np.arange(n) + np.searchsorted(kd, k0, side="left")
+    posd = np.arange(d) + np.searchsorted(k0, kd, side="right")
+    out_r[pos0], out_c[pos0], out_v[pos0] = r0, c0, v0
+    out_r[posd], out_c[posd], out_v[posd] = rd, cd, vd
+    return SparseMatrix(jnp.asarray(out_r), jnp.asarray(out_c),
+                        jnp.asarray(out_v), (int(M), int(N)))
+
+
 @jax.jit
 def lookup(sp: SparseMatrix, qi: jax.Array, qj: jax.Array):
     """Vectorized rating lookup r_{i,j} for query id arrays of any shape.
@@ -127,126 +164,368 @@ def epoch_batches(key: jax.Array, nnz: int, batch: int):
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class EpochSchedule:
-    """Conflict-free epoch schedule (device arrays, built once per fit).
+    """Tiered conflict-free epoch schedule (device arrays, built once per fit).
 
-    ``cf_idx[b]`` is a batch of triple indices in which every row id and
-    every col id appears **at most once** — the invariant the paper's D×D
-    blocking (cuMF_SGD-style, Fig. 5) provides per CUDA block, here enforced
-    per SIMD mini-batch so the scatter update is race-free and exactly
-    Eq. (5) (no collision rescaling needed).  ``lo_idx`` holds the
-    unschedulable leftovers (zipf heads whose degree exceeds the number of
-    conflict-free batches a width permits); they run through the scaled
-    fallback step.  Padding slots repeat index 0 with ``valid`` False.
+    The schedule is a *layout*, not just a batching: ``order`` permutes the
+    triple indices so that every batch of every tier is a **contiguous
+    window** of the schedule-ordered arrays (`model.build_scheduled_data`).
+    Batch assembly at train time is a `dynamic_slice` + mask, never a
+    gather — on CPU that is the difference between streaming 34 MB of
+    neighbour cache per epoch and random-probing it.
+
+    Three kinds of batches, each a conflict-free set (every row id and
+    every col id at most once — the invariant the paper's D×D blocking
+    provides per CUDA block) except the leftovers:
+
+    * ``shard_*``   — the block-aligned tier (present when ``shards > 1``):
+      cell ``(d, s, r)`` is round ``r`` of sub-epoch ``s`` on device ``d``
+      and only contains triples of block ``((d+s) % D, d)`` of the D×D
+      `block_partition` grid, so the D batches of a step touch disjoint
+      parameter blocks — `sgd.train_epoch_scheduled` scans them under
+      `jax.shard_map` with one U/b ring-rotation per sub-epoch and no
+      per-step collective.
+    * ``tier_*``    — width-tiered conflict-free batches (``widths[t]``
+      halves per tier) so sparse tail rounds are re-packed narrow instead
+      of being diverted to the scaled fallback.
+    * ``lo_*``      — the unschedulable residue (zipf heads whose degree
+      exceeds the total round budget); scaled-fallback batches at full
+      width.
+
+    Together the three cover every triple exactly once per epoch (``order``
+    is a permutation).  Windows may read past a batch's fill into the next
+    batch's triples; ``*_valid`` masks them out.
     """
 
-    cf_idx: jax.Array    # [nb_cf, W] int32
-    cf_valid: jax.Array  # [nb_cf, W] bool
-    lo_idx: jax.Array    # [nb_lo, B] int32
-    lo_valid: jax.Array  # [nb_lo, B] bool
+    order: jax.Array          # [nnz] int32 — schedule position → triple id
+    shard_starts: jax.Array   # [D, S, R] int32 (S == D sub-epochs)
+    shard_valid: jax.Array    # [D, S, R, Wsh] bool
+    tier_starts: tuple        # per tier: [nb_t] int32
+    tier_valid: tuple         # per tier: [nb_t, widths[t]] bool
+    lo_starts: jax.Array      # [nb_lo] int32
+    lo_valid: jax.Array       # [nb_lo, widths[0]] bool
+    widths: tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    shard_width: int = dataclasses.field(metadata=dict(static=True))
+    shards: int = dataclasses.field(metadata=dict(static=True))
+    block_rows: int = dataclasses.field(metadata=dict(static=True))
+    block_cols: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def pad_width(self) -> int:
+        """Slack the schedule-ordered arrays need past ``nnz`` so every
+        window slice stays in bounds (widest batch)."""
+        return self.widths[0]
 
     def stats(self) -> dict:
-        n_cf = int(jnp.sum(self.cf_valid)) if self.cf_idx.size else 0
-        n_lo = int(jnp.sum(self.lo_valid)) if self.lo_idx.size else 0
-        slots = self.cf_idx.size + self.lo_idx.size
+        """Self-describing occupancy breakdown (host side, for bench JSON).
+
+        Reports fill for *every* tier and for the leftovers — a 0.5-fill
+        narrow tier and a 0.99-fill leftover pool are different perf
+        stories even at equal cf_frac.
+        """
+        tiers = []
+        n_cf = slots_cf = nb_cf = 0
+        if self.shard_valid.size:
+            n_sh = int(jnp.sum(self.shard_valid))
+            nb_sh = int(np.prod(self.shard_valid.shape[:3]))
+            n_cf += n_sh
+            slots_cf += self.shard_valid.size
+            nb_cf += nb_sh
+            shard = dict(shards=self.shards, width=self.shard_width,
+                         rounds=nb_sh, n=n_sh,
+                         fill=n_sh / max(self.shard_valid.size, 1))
+        else:
+            shard = dict(shards=self.shards, width=self.shard_width,
+                         rounds=0, n=0, fill=0.0)
+        for w, valid in zip(self.widths, self.tier_valid):
+            n_t = int(jnp.sum(valid)) if valid.size else 0
+            nb_t = int(valid.shape[0])
+            tiers.append(dict(width=w, rounds=nb_t, n=n_t,
+                              fill=n_t / max(valid.size, 1)))
+            n_cf += n_t
+            slots_cf += valid.size
+            nb_cf += nb_t
+        n_lo = int(jnp.sum(self.lo_valid)) if self.lo_valid.size else 0
+        slots = slots_cf + self.lo_valid.size
         return dict(
-            n_cf=n_cf, n_lo=n_lo,
-            nb_cf=int(self.cf_idx.shape[0]), nb_lo=int(self.lo_idx.shape[0]),
+            n_cf=n_cf, n_lo=n_lo, nb_cf=nb_cf,
+            nb_lo=int(self.lo_valid.shape[0]),
             cf_frac=n_cf / max(n_cf + n_lo, 1),
-            fill=(n_cf + n_lo) / max(slots, 1))
+            fill=(n_cf + n_lo) / max(slots, 1),
+            cf_fill=n_cf / max(slots_cf, 1),
+            lo_fill=n_lo / max(self.lo_valid.size, 1),
+            tiers=tiers, shard=shard)
 
 
-def conflict_free_schedule(rows, cols, *, batch: int = 512,
-                           min_fill: int | None = None, slack: float = 1.0,
-                           seed: int = 0) -> EpochSchedule:
-    """Greedy conflict-free batch scheduler (host side, O(nnz·R/64)).
+class _PriorityPool:
+    """Unscheduled triples in (fixed) priority order, with O(window)
+    round extraction — the vectorized replacement for PR 2's per-triple
+    python-int bitmask probes."""
 
-    The exact-colouring refinement of MCULSH-MF's D×D rotation: a
-    first-fit edge colouring of the bipartite interaction graph with a
-    *round budget* ``R ≈ slack · nnz / batch`` and per-round capacity
-    ``batch``.  Triples are placed heaviest-endpoint-first into the lowest
-    round where (a) the round isn't full and (b) neither their row nor
-    col already appears — so every round is a conflict-free batch.  A col
-    of degree d can occupy at most min(d, R) rounds, so zipf heads
-    overflow: the unplaceable residue goes to the leftover pool, packed
-    into ordinary scaled-fallback batches.  Together the conflict-free and
-    leftover batches cover every triple exactly once per epoch.
+    def __init__(self, ids):
+        self.arr = np.asarray(ids, np.int64)
+        self.alive = np.ones(len(self.arr), bool)
+        self.cursor = 0
+        self.n = int(len(self.arr))
 
-    Row/col occupancy is one python-int bitmask per id (R bits); first
-    free round = lowest zero bit — fast enough to rebuild per fit.
+    def window(self, want: int):
+        """Positions of the first ≤``want`` alive candidates."""
+        want = min(want, self.n)
+        if want == 0:
+            return np.empty(0, np.int64)
+        pos = self.cursor + np.flatnonzero(
+            self.alive[self.cursor:self.cursor + 4 * want])
+        if len(pos) < want:  # prefix too diluted — compact the pool
+            live = self.cursor + np.flatnonzero(self.alive[self.cursor:])
+            self.arr = self.arr[live]
+            self.alive = np.ones(len(live), bool)
+            self.cursor = 0
+            pos = np.arange(min(want, len(live)), dtype=np.int64)
+        return pos[:want]
+
+    def take(self, positions):
+        self.alive[positions] = False
+        self.n -= len(positions)
+        while self.cursor < len(self.alive):
+            seg = np.flatnonzero(self.alive[self.cursor:self.cursor + 1024])
+            if len(seg):
+                self.cursor += int(seg[0])
+                break
+            self.cursor += 1024
+
+    def drain(self):
+        out = self.arr[self.cursor:][self.alive[self.cursor:]]
+        self.alive[:] = False
+        self.n = 0
+        return out
+
+
+def _match_round(rr, cc, width, passes, row_used, col_used):
+    """Greedy conflict-free matching over a candidate window (vectorized).
+
+    Each pass keeps the first occurrence of every row AND every col among
+    the still-available candidates (`np.unique` return_index — the
+    vectorized form of the old per-triple bitmask probe), removes their
+    row/col peers, and repeats; ≤ ``width`` selections.  Returns positions
+    into the window.  ``row_used``/``col_used`` are reusable scratch —
+    reset before returning.
+    """
+    sel = []
+    avail = np.ones(len(rr), bool)
+    got = 0
+    for _ in range(passes):
+        cand = np.flatnonzero(avail)
+        if not len(cand) or got >= width:
+            break
+        mr = np.zeros(len(cand), bool)
+        mr[np.unique(rr[cand], return_index=True)[1]] = True
+        mc = np.zeros(len(cand), bool)
+        mc[np.unique(cc[cand], return_index=True)[1]] = True
+        take = cand[mr & mc][:width - got]
+        if not len(take):
+            break
+        sel.append(take)
+        got += len(take)
+        row_used[rr[take]] = True
+        col_used[cc[take]] = True
+        avail[cand] &= ~(row_used[rr[cand]] | col_used[cc[cand]])
+    out = np.concatenate(sel) if sel else np.empty(0, np.int64)
+    row_used[rr[out]] = False
+    col_used[cc[out]] = False
+    return out
+
+
+def _pack_width(pool, rows, cols, width, min_fill, *, passes, window,
+                row_used, col_used, budget):
+    """Extract rounds at one width until a round comes up short of
+    ``min_fill`` (the re-pack-narrower signal) or the budget runs out."""
+    rounds = []
+    while pool.n and budget > 0:
+        pos = pool.window(window * width)
+        ids = pool.arr[pos]
+        sel = _match_round(rows[ids], cols[ids], width, passes,
+                           row_used, col_used)
+        if len(sel) < min_fill:
+            break
+        rounds.append(ids[sel])
+        pool.take(pos[sel])
+        budget -= 1
+    return rounds, budget
+
+
+def conflict_free_schedule(rows, cols, *, batch: int = 512, tiers: int = 4,
+                           tier_shrink: float = 0.5,
+                           min_fill_frac: float = 0.5, shards: int = 1,
+                           M: int | None = None, N: int | None = None,
+                           seed: int = 0, passes: int = 5, window: int = 6,
+                           max_rounds: int | None = None) -> EpochSchedule:
+    """Tiered conflict-free scheduler (host side, vectorized round-major).
+
+    Round-major greedy edge colouring of the bipartite interaction graph:
+    each round takes a near-maximal conflict-free matching (capped at the
+    tier width) from the priority-ordered pool of unscheduled triples.
+    A round is emitted at a tier only when it would not fit the next
+    tier's width (its fill is therefore ≥ ``tier_shrink``); smaller
+    rounds step the tier down by ``tier_shrink`` instead of being
+    diverted to leftovers, for ``tiers`` shrinks — finer ladders
+    (``tier_shrink`` ≈ 0.7) trade a few extra scans for tighter packing.
+    The last tier keeps ``min_fill_frac·width`` — the measured CPU
+    break-even between padded conflict-free work and the leftover path's
+    collision rescaling; only below it does the residue (zipf heads whose
+    degree exceeds the total round count) become scaled-fallback
+    leftovers.
+
+    Priority = (arrival rank within the triple's row/col under a random
+    shuffle, heaviest endpoints first): a window prefix then spans many
+    distinct rows/cols (so matchings are wide) while heads — which need
+    the most distinct rounds — always get a slot first.  All probes are
+    numpy `unique`/mask sweeps over O(window·width) candidates per round;
+    prep is reported by the trainer in ``schedule_stats`` so its
+    amortization over epochs is visible next to sec/epoch.
+
+    With ``shards = D > 1`` a block-aligned tier is carved first: triples
+    are partitioned by the D×D `block_partition` grid over row/col id
+    ranges padded to a multiple of D, and cell ``(s, d)`` (sub-epoch,
+    device) is scheduled independently at the shard width so device ``d``
+    processes block ``((d+s) % D, d)`` — the cuMF_SGD rotation that lets
+    `jax.shard_map` scan all D cells of a step in parallel with no
+    collective.  Cell residue falls through to the ordinary tiers.
     """
     rows = np.asarray(rows)
     cols = np.asarray(cols)
     nnz = int(rows.shape[0])
-    if min_fill is None:
-        # half-full is the measured break-even on CPU: a sparser cf batch
-        # costs more in padded step work than the leftover path's collision
-        # rescaling does (see benchmarks/bench_train.py)
-        min_fill = max(1, batch // 2)
     rng = np.random.default_rng(seed)
+    M = int(M) if M is not None else int(rows.max(initial=-1)) + 1
+    N = int(N) if N is not None else int(cols.max(initial=-1)) + 1
+    # a conflict-free batch holds each row/col at most once, so width
+    # beyond min(M, N) can only ever be padding — clamp
+    batch = max(1, min(batch, M, N))
+    widths = []
+    w = batch
+    for _ in range(max(1, int(tiers))):
+        widths.append(w)
+        if w == 1:
+            break
+        w = max(1, min(w - 1, int(w * tier_shrink)))
+    widths = tuple(widths)
+    # emit a round at tier t only if it can't fit tier t+1's width — fill
+    # per emitted round is then ≥ tier_shrink; the last tier uses the
+    # padded-work vs collision-rescaling break-even
+    min_fills = tuple(widths[1:]) + (max(1, int(widths[-1] * min_fill_frac)),)
 
-    dr = np.bincount(rows, minlength=int(rows.max(initial=-1)) + 1)
-    dc = np.bincount(cols, minlength=int(cols.max(initial=-1)) + 1)
-    # a conflict-free batch holds each row/col at most once, so width beyond
-    # min(M, N) can only ever be padding — clamp
-    batch = max(1, min(batch, len(dr), len(dc)))
-    if min_fill > batch:
-        min_fill = max(1, batch // 2)
-    R = max(1, int(np.ceil(slack * nnz / batch)))
-    full = (1 << R) - 1
-    # heaviest endpoints first (they need the most distinct rounds),
-    # random tiebreak so batch composition stays decorrelated
-    order = np.lexsort((rng.random(nnz), -(dr[rows] + dc[cols])))
-    ri = rows[order].tolist()
-    ci = cols[order].tolist()
+    dr = np.bincount(rows, minlength=M)
+    dc = np.bincount(cols, minlength=N)
+    # arrival rank within each row/col under a *random* arrival order
+    # (input order must not leak in: lexsorted input + zipf-sorted ids
+    # would hand every low rank to head rows and starve the matching)
+    shuffle = rng.permutation(nnz)
 
-    row_used = [0] * len(dr)
-    col_used = [0] * len(dc)
-    closed = 0                      # rounds at capacity
-    counts = [0] * R
-    cf_members: list[list[int]] = [[] for _ in range(R)]
-    leftovers: list[int] = []
-    for t in range(nnz):
-        i, j = ri[t], ci[t]
-        free = ~(row_used[i] | col_used[j] | closed) & full
-        if not free:
-            leftovers.append(order[t])
-            continue
-        low = free & -free
-        r = low.bit_length() - 1
-        cf_members[r].append(order[t])
-        row_used[i] |= low
-        col_used[j] |= low
-        cnt = counts[r] + 1
-        counts[r] = cnt
-        if cnt == batch:
-            closed |= low
+    def arrival_rank(ids, size):
+        a = ids[shuffle]
+        o = np.argsort(a, kind="stable")
+        counts = np.bincount(a, minlength=size)
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        r = np.empty(nnz, np.int64)
+        r[o] = np.arange(nnz) - np.repeat(starts, counts)
+        out = np.empty(nnz, np.int64)
+        out[shuffle] = r
+        return out
 
-    # sparse tail rounds aren't worth a padded batch — divert to leftovers
-    cf_batches = []
-    for members in cf_members:
-        if len(members) >= min_fill:
-            cf_batches.append(np.asarray(members, np.int64))
-        else:
-            leftovers.extend(members)
+    if nnz:
+        rank = np.maximum(arrival_rank(rows, M), arrival_rank(cols, N))
+        priority = np.lexsort((rng.random(nnz), -(dr[rows] + dc[cols]), rank))
+    else:
+        priority = np.empty(0, np.int64)
 
-    def pack(chunks, width):
-        if not chunks:
-            z = np.zeros((0, width), np.int32)
-            return z, np.zeros((0, width), bool)
-        idx = np.zeros((len(chunks), width), np.int32)
+    row_used = np.zeros(M, bool)
+    col_used = np.zeros(N, bool)
+    order_parts: list[np.ndarray] = []
+    pos = 0
+
+    def layout(chunks, width, starts_shape=None):
+        """Append chunks to the layout; rows sorted within each batch for
+        scatter locality.  Returns (starts, valid)."""
+        nonlocal pos
+        starts = np.zeros(len(chunks), np.int32)
         valid = np.zeros((len(chunks), width), bool)
-        for b, chunk in enumerate(chunks):
-            idx[b, :len(chunk)] = chunk
-            valid[b, :len(chunk)] = True
-        return idx, valid
+        for b, m in enumerate(chunks):
+            m = m[np.argsort(rows[m], kind="stable")]
+            order_parts.append(m)
+            starts[b] = pos
+            valid[b, :len(m)] = True
+            pos += len(m)
+        return starts, valid
 
-    cf_idx, cf_valid = pack(cf_batches, batch)
-    lo = np.asarray(leftovers, np.int64)
-    rng.shuffle(lo)
-    lo_idx, lo_valid = pack(
-        [lo[c0:c0 + batch] for c0 in range(0, len(lo), batch)], batch)
-    return EpochSchedule(jnp.asarray(cf_idx), jnp.asarray(cf_valid),
-                         jnp.asarray(lo_idx), jnp.asarray(lo_valid))
+    # ---- block-aligned shard tier (cuMF-style D×D rotation) --------------
+    D = max(1, int(shards))
+    mB = nB = 0
+    Wsh = widths[0]
+    if D > 1 and nnz:
+        mB, nB = -(-M // D), -(-N // D)          # ceil-div block extents
+        rb, cb = block_partition(rows, cols, mB * D, nB * D, D)
+        cell_of = ((rb - cb) % D) * D + cb       # cell = (s, d) flattened
+        Wsh = max(1, min(batch, mB, nB))
+        fill_sh = max(1, int(Wsh * min_fill_frac))
+        by_cell = np.argsort(cell_of[priority], kind="stable")
+        grouped = priority[by_cell]              # cell-major, priority kept
+        bounds = np.searchsorted(cell_of[grouped], np.arange(D * D + 1))
+        cells = []
+        for c0 in range(D * D):
+            pool = _PriorityPool(grouped[bounds[c0]:bounds[c0 + 1]])
+            n_cell = pool.n
+            rounds, _ = _pack_width(
+                pool, rows, cols, Wsh, fill_sh, passes=passes, window=window,
+                row_used=row_used, col_used=col_used,
+                budget=4 * n_cell // Wsh + 8)
+            cells.append(rounds)
+        R = max((len(r) for r in cells), default=0)
+        shard_starts = np.zeros((D, D, R), np.int32)
+        shard_valid = np.zeros((D, D, R, Wsh), bool)
+        scheduled = np.zeros(nnz, bool)
+        for s in range(D):
+            for r in range(R):
+                for d in range(D):
+                    cell = cells[s * D + d]
+                    chunk = [cell[r]] if r < len(cell) else [np.empty(0, np.int64)]
+                    st, va = layout(chunk, Wsh)
+                    shard_starts[d, s, r] = st[0]
+                    shard_valid[d, s, r] = va[0]
+                    scheduled[chunk[0]] = True
+        priority = priority[~scheduled[priority]]
+    else:
+        shard_starts = np.zeros((D, D, 0), np.int32)
+        shard_valid = np.zeros((D, D, 0, Wsh), bool)
+
+    # ---- width-tiered conflict-free rounds -------------------------------
+    pool = _PriorityPool(priority)
+    budget = max_rounds if max_rounds is not None else 8 * max(nnz, 1) // widths[-1] + 64
+    tier_starts, tier_valid = [], []
+    for w, mf in zip(widths, min_fills):
+        rounds, budget = _pack_width(
+            pool, rows, cols, w, max(1, min(mf, w)),
+            passes=passes, window=window, row_used=row_used,
+            col_used=col_used, budget=budget)
+        st, va = layout(rounds, w)
+        tier_starts.append(jnp.asarray(st))
+        tier_valid.append(jnp.asarray(va))
+
+    # ---- scaled-fallback leftovers ---------------------------------------
+    lo = pool.drain()
+    rng.shuffle(lo)   # decorrelate: priority order packs same-head runs
+    W0 = widths[0]
+    lo_starts, lo_valid = layout(
+        [lo[c0:c0 + W0] for c0 in range(0, len(lo), W0)], W0)
+
+    assert pos == nnz
+    order = (np.concatenate(order_parts) if order_parts
+             else np.empty(0, np.int64))
+    return EpochSchedule(
+        order=jnp.asarray(order, jnp.int32),
+        shard_starts=jnp.asarray(shard_starts),
+        shard_valid=jnp.asarray(shard_valid),
+        tier_starts=tuple(tier_starts), tier_valid=tuple(tier_valid),
+        lo_starts=jnp.asarray(lo_starts), lo_valid=jnp.asarray(lo_valid),
+        widths=widths, shard_width=int(Wsh), shards=D,
+        block_rows=int(mB), block_cols=int(nB))
 
 
 def block_partition(rows, cols, M, N, D):

@@ -68,6 +68,13 @@ def _culsh_kernel(bce, u_ref, v_ref, w_ref, c_ref, resid_ref, impl_ref,
     c_out[...] = c + gc * (sN[:, None] * eb - lc * c) * impl * vm
 
 
+def _clamp_tile(tile_b: int, B: int) -> int:
+    """Width-generic tiling: narrow schedule tiers (quarter/eighth width)
+    shouldn't pay for a mostly-padding 256-row tile.  Clamp the tile to
+    the batch rounded up to the fp32 sublane multiple (8)."""
+    return max(8, min(tile_b, -(-B // 8) * 8))
+
+
 @functools.partial(jax.jit, static_argnames=("tile_b", "interpret", "bce"))
 def culsh_sgd_step(b_i, bh_j, u, v, w, c, resid, impl, expl, bbar, r, valid,
                    sR, sN, hp, *, tile_b: int = 256, interpret: bool = True,
@@ -78,11 +85,14 @@ def culsh_sgd_step(b_i, bh_j, u, v, w, c, resid, impl, expl, bbar, r, valid,
     parameter deltas — the TPU image of the paper's register-resident CUDA
     kernel, which the load-balance property of §4.2(2) (every sample touches
     exactly K of the 2K {w, c} slots) keeps dense.  Batch must be
-    conflict-free; all operands are row-aligned (gathers happen in `ops`).
-    ``hp`` packs the 12 decayed scalars (see `ref.culsh_sgd_step_ref`).
+    conflict-free but may have any width (every schedule tier routes
+    through here; the tile is clamped to the batch).  All operands are
+    row-aligned (gathers happen in `ops`).  ``hp`` packs the 12 decayed
+    scalars (see `ref.culsh_sgd_step_ref`).
     """
     B, F = u.shape
     K = w.shape[1]
+    tile_b = _clamp_tile(tile_b, B)
     pad = (-B) % tile_b
     if pad:
         padded = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
@@ -115,8 +125,10 @@ def culsh_sgd_step(b_i, bh_j, u, v, w, c, resid, impl, expl, bbar, r, valid,
 def mf_sgd_step(u, v, r, valid, gamma_u, gamma_v, lam_u, lam_v, *,
                 tile_b: int = 256, interpret: bool = True,
                 bce: bool = False):
-    """u,v [B,F]; r,valid [B] → (u', v', e).  Batch must be conflict-free."""
+    """u,v [B,F]; r,valid [B] → (u', v', e).  Batch must be conflict-free;
+    any width (tile clamped to the batch — see `_clamp_tile`)."""
     B, F = u.shape
+    tile_b = _clamp_tile(tile_b, B)
     pad = (-B) % tile_b
     if pad:
         u = jnp.pad(u, ((0, pad), (0, 0)))

@@ -22,3 +22,15 @@ def make_host_mesh(data: int = 2, model: int = 2):
     return jax.make_mesh(
         (data, model), ("data", "model"),
         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_shard_mesh(shards: int | None = None):
+    """1-D mesh for the block-aligned conflict-free training tier.
+
+    `sgd.train_epoch_scheduled` shard_maps the D×D-blocked tier over the
+    single ``"shard"`` axis (one device per col block, row blocks ring-
+    rotating).  Defaults to all local devices; the trainer falls back to
+    the single-device replay when only one device exists.  Built without
+    axis_types (this jax version's `make_mesh` predates them)."""
+    shards = shards or jax.device_count()
+    return jax.make_mesh((shards,), ("shard",))

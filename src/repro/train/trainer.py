@@ -19,6 +19,7 @@ from repro.core import baselines as bl
 from repro.core import gsm, model, sgd, simlsh, topk
 from repro.data.sparse import SparseMatrix, conflict_free_schedule, from_coo
 from repro.kernels.mf_sgd.ops import resolve_impl
+from repro.launch.mesh import make_shard_mesh
 from repro.train import checkpoint as ckpt
 
 
@@ -41,6 +42,17 @@ class FitConfig:
                                  # baseline); 'auto' currently == conflict_free
                                  # (reserved for a backend/shape heuristic)
     cf_batch: int = 512          # conflict-free batch width (≤ min(M, N) useful)
+    tiers: int = 4               # schedule width tiers (full/half/…) — a
+                                 # modest default; reaching cf_frac ≥ 0.85 on
+                                 # heavy zipf tails takes deeper tuned ladders
+                                 # (7–9 tiers at tier_shrink≈0.71 — see
+                                 # benchmarks/bench_train.py SCALES)
+    tier_shrink: float = 0.5     # tier width ratio; ~0.71 packs rounds ≥71%
+                                 # full at the cost of more tiers/scans
+    min_fill_frac: float = 0.5   # last-tier re-pack threshold
+    shards: int | str = "auto"   # block-aligned shard-map tier width: 'auto'
+                                 # = jax.device_count() (single-device path
+                                 # when 1), or an explicit device count
     use_kernels: bool = False    # route conflict-free batches through the
                                  # fused kernels/mf_sgd training step
     kernel_impl: str = "auto"    # auto | pallas | ref — 'auto' picks the
@@ -89,6 +101,23 @@ def build_neighbours(sp: SparseMatrix, cfg: FitConfig, key):
     return JK, time.perf_counter() - t0, S, k_sig
 
 
+def _pad_params(p: model.Params, Mp: int, Np: int) -> model.Params:
+    """Grow params with zero rows/cols up to the shard-divisible sizes."""
+    pad0 = lambda a, n: jnp.concatenate(
+        [a, jnp.zeros((n - a.shape[0],) + a.shape[1:], a.dtype)])
+    return model.Params(U=pad0(p.U, Mp), V=pad0(p.V, Np), b=pad0(p.b, Mp),
+                        bh=pad0(p.bh, Np), W=pad0(p.W, Np),
+                        C=pad0(p.C, Np), mu=p.mu)
+
+
+def _slice_params(p: model.Params, M: int, N: int) -> model.Params:
+    """Drop shard padding (no-op when already unpadded)."""
+    if p.U.shape[0] == M and p.V.shape[0] == N:
+        return p
+    return model.Params(U=p.U[:M], V=p.V[:N], b=p.b[:M], bh=p.bh[:N],
+                        W=p.W[:N], C=p.C[:N], mu=p.mu)
+
+
 def fit(train_coo, test_coo, shape, cfg: FitConfig,
         log: Callable[[str], None] | None = None) -> FitResult:
     key = jax.random.PRNGKey(cfg.seed)
@@ -114,28 +143,45 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
     scheduled = cfg.schedule != "none"
     bce = cfg.loss == "bce"
 
-    # once-per-fit precomputation: neighbour-gather cache + conflict-free
-    # schedule (Ω and J^K are fixed for the whole offline fit)
+    # shard resolution: block-aligned shard-map tier only when the host
+    # actually has multiple devices (single-device path otherwise)
+    shards = jax.device_count() if cfg.shards == "auto" else int(cfg.shards)
+    shards = max(1, min(shards, jax.device_count(), sp.M, sp.N))
+    mesh = make_shard_mesh(shards) if scheduled and shards > 1 else None
+
+    # once-per-fit precomputation: tiered conflict-free schedule + the
+    # schedule-ordered training data + eval gather cache (Ω, J^K and the
+    # test set are fixed for the whole offline fit).  Prep is a one-off
+    # cost amortized over epochs — schedule_stats reports both.
     prep_secs = 0.0
     sched_stats = None
+    ec = None
     if scheduled:
         t0 = time.perf_counter()
-        if mf_only:  # mf_step never reads neighbour slots — zero-width
-            z = jnp.zeros((sp.nnz, 0), jnp.float32)  # cache, no allocation
-            cache = model.NeighbourCache(z, z)
-        else:
-            cache = model.build_gather_cache(sp, JK)
         sched = conflict_free_schedule(
             np.asarray(sp.rows), np.asarray(sp.cols),
-            batch=min(cfg.cf_batch, cfg.batch), seed=cfg.seed)
-        jax.block_until_ready(cache.rnb)
+            batch=min(cfg.cf_batch, cfg.batch), tiers=cfg.tiers,
+            tier_shrink=cfg.tier_shrink, min_fill_frac=cfg.min_fill_frac,
+            shards=shards, M=sp.M, N=sp.N, seed=cfg.seed)
+        sd = model.build_scheduled_data(sp, JK, sched, mf_only=mf_only)
+        if cfg.eval_every:
+            ec = model.build_eval_cache(sp, JK, te_r, te_c, mf_only=mf_only)
+        jax.block_until_ready(sd.r)
         prep_secs = time.perf_counter() - t0
-        sched_stats = sched.stats()
+        sched_stats = dict(
+            sched.stats(), prep_sec=prep_secs,
+            prep_per_epoch=prep_secs / max(cfg.epochs - start_epoch, 1))
         if log:
             log(f"schedule: {sched_stats['nb_cf']} cf + "
                 f"{sched_stats['nb_lo']} leftover batches "
                 f"(cf_frac={sched_stats['cf_frac']:.2f}, "
-                f"fill={sched_stats['fill']:.2f}, prep={prep_secs:.2f}s)")
+                f"fill={sched_stats['fill']:.2f}, prep={prep_secs:.2f}s "
+                f"= {sched_stats['prep_per_epoch']:.3f}s/epoch)")
+        if mesh is not None:
+            # shard_map needs equal param blocks — pad ids to D·block size
+            # (padded rows/cols are touched by no triple; sliced off at end)
+            params = _pad_params(params, sched.block_rows * shards,
+                                 sched.block_cols * shards)
 
     # impl resolution needs the backend, so it happens here, outside jit
     # (mirrors the candidate_score impl="auto" pattern)
@@ -149,11 +195,10 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
     k0 = jax.random.fold_in(k_ep, start_epoch)
     if scheduled:
         epoch_fn = sgd.train_epoch_scheduled.lower(
-            params, sp, JK, cache, sched, k0, ep0, cfg.hp, mf_only=mf_only,
+            params, sd, sched, k0, ep0, cfg.hp, mf_only=mf_only,
             bce=bce, use_kernels=cfg.use_kernels, impl=impl,
-            interpret=interpret).compile()
-        run = lambda pp, kk, ee: epoch_fn(pp, sp, JK, cache, sched, kk, ee,
-                                          cfg.hp)
+            interpret=interpret, mesh=mesh).compile()
+        run = lambda pp, kk, ee: epoch_fn(pp, sd, sched, kk, ee, cfg.hp)
     else:
         epoch_fn = sgd.train_epoch.lower(
             params, sp, JK, k0, ep0, cfg.hp, batch=cfg.batch,
@@ -169,13 +214,20 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
         jax.block_until_ready(params.U)
         t_train += time.perf_counter() - t0
         if cfg.eval_every and (ep + 1) % cfg.eval_every == 0:
-            r = float(model.rmse(params, sp, JK, te_r, te_c, te_v, mf_only=mf_only))
+            if ec is not None:   # per-epoch eval is a cached gather scan
+                r = float(model.rmse_cached(params, ec, te_r, te_c, te_v,
+                                            mf_only=mf_only))
+            else:
+                r = float(model.rmse(params, sp, JK, te_r, te_c, te_v,
+                                     mf_only=mf_only))
             history.append((ep, t_train, r))
             if log:
                 log(f"epoch {ep:3d}  t={t_train:7.2f}s  rmse={r:.4f}")
         if cfg.ckpt_dir and cfg.ckpt_every and (ep + 1) % cfg.ckpt_every == 0:
-            ckpt.save(cfg.ckpt_dir, params, step=ep + 1)
+            ckpt.save(cfg.ckpt_dir, _slice_params(params, sp.M, sp.N),
+                      step=ep + 1)
 
+    params = _slice_params(params, sp.M, sp.N)
     return FitResult(params, JK, history, nb_secs, S, hash_key=k_sig,
                      compile_seconds=compile_secs, prep_seconds=prep_secs,
                      schedule_stats=sched_stats)

@@ -17,6 +17,47 @@ import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 
+def check_sharded_epoch():
+    """Block-aligned shard-map tier (4 host devices) == single-device
+    replay of the same schedule, params and RMSE within 1e-5."""
+    from repro.core import model, sgd
+    from repro.data import synthetic as syn
+    from repro.data.sparse import conflict_free_schedule, from_coo
+    from repro.launch.mesh import make_shard_mesh
+
+    M, N, D, K = 240, 96, 4, 8
+    spec = dataclasses.replace(syn.MOVIELENS_LIKE, M=M, N=N, nnz=4000)
+    rows, cols, vals, _ = syn.generate(spec, seed=0)
+    sp = from_coo(rows, cols, vals, (M, N))
+    rng = np.random.default_rng(0)
+    JK = jnp.asarray(rng.integers(0, N, (N, K)), jnp.int32)
+    sched = conflict_free_schedule(np.asarray(sp.rows), np.asarray(sp.cols),
+                                   batch=64, M=M, N=N, shards=D, seed=0)
+    assert sched.shard_starts.size, "shard tier empty"
+    sd = model.build_scheduled_data(sp, JK, sched)
+    p0 = model.init_from_data(jax.random.PRNGKey(0), sp, 8, K)
+    hp = sgd.Hyper()
+    mesh = make_shard_mesh(D)
+    key = jax.random.PRNGKey(1)
+    copy = lambda p: jax.tree.map(jnp.copy, p)
+    p1, p2 = copy(p0), copy(p0)
+    for ep in range(2):
+        kk, ee = jax.random.fold_in(key, ep), jnp.asarray(ep)
+        p1 = sgd.train_epoch_scheduled(p1, sd, sched, kk, ee, hp)
+        p2 = sgd.train_epoch_scheduled(p2, sd, sched, kk, ee, hp, mesh=mesh)
+    for f in ("U", "V", "b", "bh", "W", "C"):
+        np.testing.assert_allclose(np.asarray(getattr(p1, f)),
+                                   np.asarray(getattr(p2, f)),
+                                   rtol=1e-5, atol=1e-5, err_msg=f)
+    te_r = jnp.asarray(rng.integers(0, M, 500), jnp.int32)
+    te_c = jnp.asarray(rng.integers(0, N, 500), jnp.int32)
+    te_v = jnp.asarray(rng.uniform(1, 5, 500), jnp.float32)
+    r1 = float(model.rmse(p1, sp, JK, te_r, te_c, te_v))
+    r2 = float(model.rmse(p2, sp, JK, te_r, te_c, te_v))
+    assert abs(r1 - r2) <= 1e-5, (r1, r2)
+    print(f"sharded rmse {r2:.6f} == single-device {r1:.6f}")
+
+
 def check_rotation():
     from repro.core.sgd import Hyper
     from repro.data import synthetic as syn
@@ -234,5 +275,6 @@ if __name__ == "__main__":
     {"rotation": check_rotation, "moe_a2a": check_moe_a2a,
      "moe_ep2d": check_moe_ep2d, "compression": check_compression,
      "elastic": check_elastic_restore,
-     "small_dryrun": check_small_dryrun}[name]()
+     "small_dryrun": check_small_dryrun,
+     "sharded_epoch": check_sharded_epoch}[name]()
     print(f"PASS {name}")

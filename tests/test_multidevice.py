@@ -23,6 +23,6 @@ def _run(name, timeout=900):
 
 @pytest.mark.parametrize("check", ["rotation", "moe_a2a", "moe_ep2d",
                                    "compression", "elastic",
-                                   "small_dryrun"])
+                                   "small_dryrun", "sharded_epoch"])
 def test_multidevice(check):
     _run(check)

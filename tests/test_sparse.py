@@ -1,10 +1,11 @@
-"""Sparse substrate: lookup, degrees, baselines, batching."""
+"""Sparse substrate: lookup, degrees, baselines, batching, merging."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.data.sparse import baselines, degrees, epoch_batches, from_coo, lookup
+from repro.data.sparse import (baselines, degrees, epoch_batches, from_coo,
+                               lookup, merge_coo)
 
 
 def _dense_of(sp):
@@ -64,3 +65,33 @@ def test_epoch_batches_cover_every_sample():
     idx, valid = epoch_batches(jax.random.PRNGKey(0), 1000, 128)
     flat = np.asarray(idx)[np.asarray(valid)]
     assert sorted(flat.tolist()) == list(range(1000))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 30), st.integers(0, 10**6))
+def test_merge_coo_matches_from_coo(M, N, seed):
+    """Sorted-array union merge ≡ full rebuild, including a grown id space."""
+    rng = np.random.default_rng(seed)
+    nnz = min(M * N, int(rng.integers(1, 80)))
+    flat = rng.choice(M * N, size=nnz, replace=False)
+    d = int(rng.integers(1, 40))
+    M2, N2 = M + int(rng.integers(0, 8)), N + int(rng.integers(0, 8))
+    # delta keys disjoint from the observed set (ΔΩ = new interactions)
+    pool = np.setdiff1d(rng.choice(M2 * N2, size=min(4 * d, M2 * N2),
+                                   replace=False),
+                        (flat // N) * N2 + (flat % N))
+    dflat = pool[:min(d, len(pool))]
+    rows, cols = (flat // N).astype(np.int32), (flat % N).astype(np.int32)
+    vals = rng.uniform(0.5, 5, nnz).astype(np.float32)
+    drows = (dflat // N2).astype(np.int32)
+    dcols = (dflat % N2).astype(np.int32)
+    dvals = rng.uniform(0.5, 5, len(dflat)).astype(np.float32)
+    sp = from_coo(rows, cols, vals, (M, N))
+    got = merge_coo(sp, drows, dcols, dvals, (M2, N2))
+    want = from_coo(np.concatenate([rows, drows]),
+                    np.concatenate([cols, dcols]),
+                    np.concatenate([vals, dvals]), (M2, N2))
+    assert got.shape == want.shape
+    for f in ("rows", "cols", "vals"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)), err_msg=f)
