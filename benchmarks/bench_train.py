@@ -11,7 +11,8 @@ applied identically to every path) and updates/sec for:
   * ``sched``  — `sgd.train_epoch_scheduled`: tiered conflict-free
     schedule scanned over the schedule-ordered `ScheduledData`
     (contiguous-slice assembly; scaled fallback for the zipf-head
-    residue), params donated across epochs,
+    residue), parameters in the packed planes (`model.PackedParams`:
+    2 scatters/step vs the legacy path's 6) donated across epochs,
   * ``kernel`` — same, with the fused `kernels/mf_sgd` step on every
     conflict-free tier (``impl="auto"``: pure-jnp ref on CPU, Pallas
     elsewhere).
@@ -95,7 +96,7 @@ def run_epochs(compiled, run_args, params, epochs: int):
     for ep in range(epochs):
         t0 = time.perf_counter()
         params = compiled(params, *run_args(ep))
-        jax.block_until_ready(params.U)
+        jax.block_until_ready(jax.tree.leaves(params)[0])
         times.append(time.perf_counter() - t0)
     return params, times
 
@@ -127,6 +128,8 @@ def bench_scale(name: str, *, epochs: int, seed: int = 0) -> dict:
     emit(f"train.base.{name}", sec, f"ups={sp.nnz / sec:,.0f}")
 
     # --- tiered schedule + schedule-ordered data (± fused kernels) --------
+    # the scheduled paths train on the packed planes (model.PackedParams:
+    # 2 scatters/step vs 6 unpacked) and unpack only for the RMSE eval
     t0 = time.perf_counter()
     sched = conflict_free_schedule(np.asarray(sp.rows), np.asarray(sp.cols),
                                    batch=cf_batch, tiers=tiers,
@@ -137,21 +140,26 @@ def bench_scale(name: str, *, epochs: int, seed: int = 0) -> dict:
     prep = time.perf_counter() - t0
     out["schedule"] = dict(prep_sec=prep, prep_per_epoch=prep / epochs,
                            **sched.stats())
+    out["step_layout"] = dict(params="packed-planes",
+                              scatters_per_step=2, gathers_per_step=2,
+                              unpacked_scatters_per_step=6)
 
+    pp0 = model.pack_params(params0)
     for label, use_kernels in (("sched", False), ("kernel", True)):
         impl = resolve_impl("auto") if use_kernels else "ref"
         t0 = time.perf_counter()
         fn = sgd.train_epoch_scheduled.lower(
-            params0, sd, sched, keys(0), jnp.asarray(0), hp,
+            pp0, sd, sched, keys(0), jnp.asarray(0), hp,
             use_kernels=use_kernels, impl=impl,
             interpret=jax.default_backend() == "cpu").compile()
         compile_sec = time.perf_counter() - t0
-        p_end, times = run_epochs(
+        pp_end, times = run_epochs(
             fn, lambda ep: (sd, sched, keys(ep), jnp.asarray(ep), hp),
-            copy(params0), epochs)
+            copy(pp0), epochs)
         sec = min(times)
         out[label] = dict(sec_per_epoch=sec, updates_per_sec=sp.nnz / sec,
-                          compile_sec=compile_sec, rmse=ev(p_end))
+                          compile_sec=compile_sec,
+                          rmse=ev(model.unpack_params(pp_end)))
         emit(f"train.{label}.{name}", sec,
              f"ups={sp.nnz / sec:,.0f};speedup={out['base']['sec_per_epoch'] / sec:.2f}x")
 

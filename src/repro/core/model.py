@@ -24,6 +24,13 @@ from repro.data.sparse import SparseMatrix, baselines, lookup
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class Params:
+    """Unpacked parameters — the public API layout.
+
+    `FitResult`, checkpoints, `repro.serve` and the online Alg.-4 path all
+    speak this layout; the scheduled training hot path packs it into the
+    two-plane `PackedParams` (see `pack_params`) and unpacks at the eval /
+    checkpoint / result boundary."""
+
     U: jax.Array   # [M, F]
     V: jax.Array   # [N, F]
     b: jax.Array   # [M]
@@ -31,6 +38,85 @@ class Params:
     W: jax.Array   # [N, K]
     C: jax.Array   # [N, K]
     mu: jax.Array  # []
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedParams:
+    """Packed-plane training layout: all row-side parameters in one
+    ``[M, F+1]`` plane and all col-side parameters in one ``[N, F+2K+1]``
+    plane, so an SGD step is **two** gather/scatter pairs instead of six.
+
+    Column layout (scalars last, so U/V start lane-aligned at 0):
+
+    * ``row[:, :F]`` = U,   ``row[:, F]`` = b
+    * ``col[:, :F]`` = V,   ``col[:, F:F+K]`` = W,
+      ``col[:, F+K:F+2K]`` = C,   ``col[:, F+2K]`` = b̂
+
+    Every per-sample CULSH-MF update touches one row of each plane (the
+    §4.2(2) load-balance property: exactly K of the 2K {w, c} slots, plus
+    V/b̂ — all living in the same col-plane row), so the packed scatter
+    moves the same payload as the six separate ones in one op each.  Under
+    the rotation shard tier the whole row plane ring-`ppermute`s as one
+    array (U and b together — one collective per sub-epoch, not two).
+    """
+
+    row: jax.Array  # [M, F+1] float32 — U ‖ b
+    col: jax.Array  # [N, F+2K+1] float32 — V ‖ W ‖ C ‖ b̂
+    mu: jax.Array   # []
+    F: int = dataclasses.field(metadata=dict(static=True))
+    K: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def bh(self) -> jax.Array:
+        """The b̂ column (neighbour-baseline snapshots gather from it)."""
+        return self.col[:, self.F + 2 * self.K]
+
+
+def pack_params(p: Params) -> PackedParams:
+    """Params → the two training planes (one concatenate per side)."""
+    F = int(p.U.shape[1])
+    K = int(p.W.shape[1])
+    return PackedParams(
+        row=jnp.concatenate([p.U, p.b[:, None]], axis=1),
+        col=jnp.concatenate([p.V, p.W, p.C, p.bh[:, None]], axis=1),
+        mu=p.mu, F=F, K=K)
+
+
+def unpack_params(pp: PackedParams) -> Params:
+    """The inverse of `pack_params` (six column slices)."""
+    F, K = pp.F, pp.K
+    return Params(U=pp.row[:, :F], V=pp.col[:, :F], b=pp.row[:, F],
+                  bh=pp.col[:, F + 2 * K], W=pp.col[:, F:F + K],
+                  C=pp.col[:, F + K:F + 2 * K], mu=pp.mu)
+
+
+def remap_params(p: Params, sched) -> Params:
+    """Re-lay params from original ids into the schedule's block-padded id
+    space (`EpochSchedule.row_map`/``col_map``) — required before training
+    on a ``shards > 1`` schedule, whose `ScheduledData`/`ShardData` store
+    remapped ids so every parameter block is a contiguous equal-size range
+    (the shape `jax.shard_map` needs).  Padded slots (ids no map hits) are
+    zero and touched by no triple.  No-op on unsharded schedules."""
+    if sched.row_map.size == 0:
+        return p
+    rm, cm = sched.row_map, sched.col_map
+    Mp = sched.shards * sched.block_rows
+    Np = sched.shards * sched.block_cols
+    scat = lambda a, m, n: jnp.zeros((n,) + a.shape[1:], a.dtype).at[m].set(a)
+    return Params(U=scat(p.U, rm, Mp), V=scat(p.V, cm, Np),
+                  b=scat(p.b, rm, Mp), bh=scat(p.bh, cm, Np),
+                  W=scat(p.W, cm, Np), C=scat(p.C, cm, Np), mu=p.mu)
+
+
+def unmap_params(p: Params, sched) -> Params:
+    """Inverse of `remap_params`: gather the original-id rows back out of
+    the block-padded layout (drops the padding slots)."""
+    if sched.row_map.size == 0:
+        return p
+    rm, cm = sched.row_map, sched.col_map
+    return Params(U=p.U[rm], V=p.V[cm], b=p.b[rm], bh=p.bh[cm],
+                  W=p.W[cm], C=p.C[cm], mu=p.mu)
 
 
 @jax.tree_util.register_dataclass
@@ -85,13 +171,22 @@ def assemble(sp: SparseMatrix, JK: jax.Array, idx: jax.Array,
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ScheduledData:
-    """Training data laid out in `EpochSchedule` order (once per fit).
+    """Cf-region training data laid out in `EpochSchedule` order (once per
+    fit).
 
-    Every batch of every schedule tier is a contiguous window of these
+    Every width-tier / leftover batch is a contiguous window of these
     arrays, so batch assembly is a `dynamic_slice` + the schedule's valid
     mask — no per-batch gather at all (`slice_batch`).  Arrays are padded
-    by ``sched.pad_width`` slots past nnz so a window that reads past the
-    last batch's fill stays in bounds (the overread is masked).
+    by ``sched.pad_width`` slots past the region fill so a window that
+    reads past the last batch's fill stays in bounds (the overread is
+    masked).  Shard-tier triples (schedule positions ``< shard_span``) are
+    **not** here — they live in the dense, device-shardable `ShardData` —
+    so on a multi-device mesh the replicated arrays only hold the
+    cf-region triples.
+
+    With ``sched.shards > 1`` the ``i``/``j``/``nb`` ids are in the
+    schedule's block-padded id space (see `EpochSchedule` — train against
+    `remap_params`-relaid parameters).
 
     For ``mf_only`` fits the neighbour planes are built zero-width: the
     MF step never reads them and the [nnz, K] cache memory is skipped.
@@ -105,28 +200,53 @@ class ScheduledData:
     expl: jax.Array  # [P, K] float32 explicit-slot mask
 
 
-def build_scheduled_data(sp: SparseMatrix, JK: jax.Array, sched, *,
-                         mf_only: bool = False,
-                         chunk: int = 65536) -> ScheduledData:
-    """One binary-search sweep over the schedule-ordered triples →
-    `ScheduledData` (chunked so the [chunk, K, log nnz] search
-    intermediates stay off the high-water mark; written in schedule order
-    directly so no second permutation pass is needed)."""
-    order = sched.order
-    pad = sched.pad_width
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardData:
+    """Shard-tier cells as dense ``[D, S, R, Wsh]`` slot arrays.
+
+    Cell ``(d, s, r)`` *is* the batch — no window slicing — and the
+    leading axis is the device axis, so under `jax.shard_map` the arrays
+    shard with ``P("shard")`` and each device holds exactly its own
+    cells' triples (the `ScheduledData` backing arrays used to be
+    replicated across the mesh; ROADMAP "shard-tier data sharding").
+    Empty slots are masked by ``sched.shard_valid``.  Ids are in the
+    block-padded space whenever the schedule's are.
+    """
+
+    i: jax.Array     # [D, S, R, W] int32
+    j: jax.Array     # [D, S, R, W] int32
+    r: jax.Array     # [D, S, R, W] float32
+    nb: jax.Array    # [D, S, R, W, K] int32
+    rnb: jax.Array   # [D, S, R, W, K] float32
+    expl: jax.Array  # [D, S, R, W, K] float32
+
+
+def _ordered_planes(sp: SparseMatrix, JK: jax.Array, sched, order_ids,
+                    pad: int, *, mf_only: bool, chunk: int):
+    """One binary-search sweep over ``order_ids``-ordered triples → the
+    (i, j, r, nb, rnb, expl) planes padded by ``pad`` zero slots (chunked
+    so the [chunk, K, log nnz] search intermediates stay off the
+    high-water mark; written in schedule order directly so no second
+    permutation pass is needed).  Ids are remapped into the schedule's
+    block-padded space when the schedule carries maps; rating lookups
+    always use the original ids."""
+    n = int(order_ids.shape[0])
+    has_map = sched.row_map.size > 0
     padded = lambda a: jnp.concatenate(
         [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
-    i = padded(sp.rows[order])
-    j = padded(sp.cols[order])
-    r = padded(sp.vals[order])
+    ri, cj = sp.rows[order_ids], sp.cols[order_ids]
+    i = padded(sched.row_map[ri] if has_map else ri)
+    j = padded(sched.col_map[cj] if has_map else cj)
+    r = padded(sp.vals[order_ids])
     if mf_only:
         z2 = jnp.zeros((i.shape[0], 0), jnp.float32)
-        return ScheduledData(i, j, r, z2.astype(jnp.int32), z2, z2)
+        return i, j, r, z2.astype(jnp.int32), z2, z2
     K = JK.shape[1]
-    nb = JK[sp.cols[order]]
+    nb = JK[cj]                      # original col ids (for the lookup)
     rnb_parts, expl_parts = [], []
-    for c0 in range(0, sp.nnz, chunk):
-        ii = sp.rows[order[c0:c0 + chunk]]
+    for c0 in range(0, n, chunk):
+        ii = ri[c0:c0 + chunk]
         nn = nb[c0:c0 + chunk]
         rnb, hit = lookup(sp, jnp.broadcast_to(ii[:, None], nn.shape), nn)
         rnb_parts.append(rnb)
@@ -134,7 +254,33 @@ def build_scheduled_data(sp: SparseMatrix, JK: jax.Array, sched, *,
     z = jnp.zeros((0, K), jnp.float32)
     rnb = jnp.concatenate(rnb_parts) if rnb_parts else z
     expl = jnp.concatenate(expl_parts) if expl_parts else z
-    return ScheduledData(i, j, r, padded(nb), padded(rnb), padded(expl))
+    nb_stored = sched.col_map[nb] if has_map else nb
+    return i, j, r, padded(nb_stored), padded(rnb), padded(expl)
+
+
+def build_scheduled_data(sp: SparseMatrix, JK: jax.Array, sched, *,
+                         mf_only: bool = False,
+                         chunk: int = 65536) -> ScheduledData:
+    """Cf-region (width tiers + leftovers) planes in schedule order —
+    see `_ordered_planes`.  Pair with `build_shard_data` when the
+    schedule has a shard tier."""
+    return ScheduledData(*_ordered_planes(
+        sp, JK, sched, sched.order[sched.shard_span:], sched.pad_width,
+        mf_only=mf_only, chunk=chunk))
+
+
+def build_shard_data(sp: SparseMatrix, JK: jax.Array, sched, *,
+                     mf_only: bool = False,
+                     chunk: int = 65536) -> ShardData | None:
+    """Shard-tier cells gathered into the dense ``[D, S, R, Wsh]`` layout
+    (None when the schedule has no shard tier)."""
+    if sched.shard_span == 0:
+        return None
+    Wsh = sched.shard_width
+    planes = _ordered_planes(sp, JK, sched, sched.order[:sched.shard_span],
+                             Wsh, mf_only=mf_only, chunk=chunk)
+    idx = sched.shard_starts[..., None] + jnp.arange(Wsh)   # [D, S, R, W]
+    return ShardData(*(p[idx] for p in planes))
 
 
 def slice_batch(sd: ScheduledData, start: jax.Array, width: int,
@@ -146,6 +292,26 @@ def slice_batch(sd: ScheduledData, start: jax.Array, width: int,
                  expl, 1.0 - expl, valid.astype(jnp.float32))
 
 
+def predict_gathered(mu, b_i, bh_j, ui, vj, wj, cj, bh_of_nb,
+                     rnb, expl, impl):
+    """Eq. (1) on pre-gathered row-aligned operands — the single forward
+    shared by the unpacked `predict`, the packed-plane SGD steps and the
+    `kernels/mf_sgd` jnp ref, so the layouts stay bit-identical by
+    construction (only the in-Pallas kernel keeps an inline copy)."""
+    bbar = mu + b_i + bh_j                                  # [B]
+    bbar_nb = mu + b_i[:, None] + bh_of_nb                  # [B, K]
+    resid = (rnb - bbar_nb) * expl                          # [B, K]
+    nR = jnp.sum(expl, 1)
+    nN = jnp.sum(impl, 1)
+    sR = jnp.where(nR > 0, jax.lax.rsqrt(jnp.maximum(nR, 1.0)), 0.0)
+    sN = jnp.where(nN > 0, jax.lax.rsqrt(jnp.maximum(nN, 1.0)), 0.0)
+    expl_term = sR * jnp.sum(resid * wj, 1)
+    impl_term = sN * jnp.sum(impl * cj, 1)
+    dot = jnp.sum(ui * vj, 1)
+    pred = bbar + expl_term + impl_term + dot
+    return pred, dict(resid=resid, sR=sR, sN=sN)
+
+
 def predict(p: Params, bt: Batch, bh_nb: jax.Array | None = None):
     """Eq. (1). Returns (pred [B], aux) with aux reused by the manual SGD.
 
@@ -153,20 +319,10 @@ def predict(p: Params, bt: Batch, bh_nb: jax.Array | None = None):
     b̂[nb] — the shard-tier scan passes an epoch-start snapshot because
     neighbour cols cross device block boundaries (cuMF-style stale read;
     b̂ drifts one epoch at most)."""
-    bbar = p.mu + p.b[bt.i] + p.bh[bt.j]                    # [B]
     bh_of_nb = p.bh[bt.nb] if bh_nb is None else bh_nb
-    bbar_nb = p.mu + p.b[bt.i][:, None] + bh_of_nb          # [B, K]
-    resid = (bt.rnb - bbar_nb) * bt.expl                    # [B, K]
-    nR = jnp.sum(bt.expl, 1)
-    nN = jnp.sum(bt.impl, 1)
-    sR = jnp.where(nR > 0, jax.lax.rsqrt(jnp.maximum(nR, 1.0)), 0.0)
-    sN = jnp.where(nN > 0, jax.lax.rsqrt(jnp.maximum(nN, 1.0)), 0.0)
-    w_j, c_j = p.W[bt.j], p.C[bt.j]                         # [B, K]
-    expl_term = sR * jnp.sum(resid * w_j, 1)
-    impl_term = sN * jnp.sum(bt.impl * c_j, 1)
-    dot = jnp.sum(p.U[bt.i] * p.V[bt.j], 1)
-    pred = bbar + expl_term + impl_term + dot
-    return pred, dict(resid=resid, sR=sR, sN=sN)
+    return predict_gathered(p.mu, p.b[bt.i], p.bh[bt.j], p.U[bt.i],
+                            p.V[bt.j], p.W[bt.j], p.C[bt.j], bh_of_nb,
+                            bt.rnb, bt.expl, bt.impl)
 
 
 def predict_mf(p: Params, bt: Batch):

@@ -5,6 +5,16 @@ Two engines, mirroring the paper's two contributions:
 * ``mf_step``        — CUSGD++ analogue: plain MF {U, V} only.
 * ``culsh_step``     — CULSH-MF: the full six-parameter fused update.
 
+Both exist in two layouts.  The *unpacked* steps above take `model.Params`
+and scatter each parameter separately — they are the reference semantics
+and the engine of the general path (`train_epoch`, the online Alg.-4
+building block).  The *packed* steps (``mf_step_packed`` /
+``culsh_step_packed``) take `model.PackedParams` — row-side parameters in
+one [M, F+1] plane, col-side in one [N, F+2K+1] plane — and emit **two**
+gather/scatter pairs per step instead of six; they are bit-identical to
+the unpacked steps (shared forward + shared delta computation) and power
+the scheduled hot path.
+
 TPU adaptation (DESIGN.md §2/§8.1): updates are applied to a *mini-batch*
 with scatter-add (`.at[].add`).  When the batch is conflict-free (each i and
 each j at most once — the invariant the paper's D×D blocking provides) this
@@ -15,10 +25,13 @@ Two epoch drivers:
 
 * ``train_epoch``            — general case: binary-search batch assembly +
   collision rescaling every batch (also the Alg.-4 online building block).
+  Unpacked `Params` in, unpacked out.
 * ``train_epoch_scheduled``  — offline hot path: contiguous-slice assembly
   from the schedule-ordered `ScheduledData`, width-tiered conflict-free
-  scans (+ optional fused Pallas kernels), an optional shard_map
-  block-rotation tier, params donated across epochs.  See bench_train.py.
+  scans over packed planes (+ optional fused Pallas kernels), an optional
+  shard_map block-rotation tier over the dense `ShardData` cells,
+  precomputed leftover collision scales, params donated across epochs.
+  `PackedParams` in, `PackedParams` out.  See bench_train.py.
 """
 from __future__ import annotations
 
@@ -28,8 +41,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.model import (Batch, Params, ScheduledData, assemble,
-                              predict, predict_mf, slice_batch)
+from repro.core.model import (Batch, PackedParams, Params, ScheduledData,
+                              ShardData, assemble, predict, predict_gathered,
+                              predict_mf, slice_batch)
 from repro.data.sparse import EpochSchedule, SparseMatrix, epoch_batches
 from repro.kernels.mf_sgd.ops import apply_culsh_sgd, apply_mf_sgd
 
@@ -60,15 +74,28 @@ def lr_decay(hp: Hyper, t: jax.Array) -> jax.Array:
     return 1.0 / (1.0 + hp.beta * jnp.power(t.astype(jnp.float32), 1.5))
 
 
-def _collision_scales(p: Params, bt: Batch):
-    """1/count normalizers so rows hit k× in a batch get the *mean* update
-    (zipf heads would otherwise receive k summed steps and diverge).
-    Conflict-free batches have all counts = 1 → exact Eq. (5)."""
-    ci = jnp.zeros((p.U.shape[0],), jnp.float32).at[bt.i].add(bt.valid)
-    cj = jnp.zeros((p.V.shape[0],), jnp.float32).at[bt.j].add(bt.valid)
+def _batch_scales(M: int, N: int, bt: Batch, conflict_free: bool, scales):
+    """(si, sj, si_col, sj_col) — collision normalizers and their [B, 1]
+    broadcasts, so rows hit k× in a batch get the *mean* update (zipf
+    heads would otherwise receive k summed steps and diverge).
+
+    ``conflict_free`` (a static promise that each i and j appears at most
+    once, the D×D-block invariant) elides the two O(M)+O(N) scatter-add
+    allocations entirely: all counts are 1.  ``scales`` optionally
+    supplies host-precomputed (si, sj) — the scheduled leftover batches
+    have fixed composition per fit, so their counts are schedule
+    constants (`EpochSchedule.lo_scale_*`), not per-batch work."""
+    if scales is not None:
+        si, sj = scales
+        return si, sj, si[:, None], sj[:, None]
+    if conflict_free:
+        one = jnp.ones((), jnp.float32)
+        return one, one, one, one
+    ci = jnp.zeros((M,), jnp.float32).at[bt.i].add(bt.valid)
+    cj = jnp.zeros((N,), jnp.float32).at[bt.j].add(bt.valid)
     si = 1.0 / jnp.maximum(ci[bt.i], 1.0)
     sj = 1.0 / jnp.maximum(cj[bt.j], 1.0)
-    return si, sj
+    return si, sj, si[:, None], sj[:, None]
 
 
 def _error(r, pred, bce: bool):
@@ -78,36 +105,73 @@ def _error(r, pred, bce: bool):
     return r - (jax.nn.sigmoid(pred) if bce else pred)
 
 
-def _scales(p: Params, bt: Batch, conflict_free: bool):
-    """(si, sj, si_col, sj_col) — collision normalizers and their [B, 1]
-    broadcasts.  ``conflict_free`` (a static promise that each i and j
-    appears at most once, the D×D-block invariant) elides the two
-    O(M)+O(N) scatter-add allocations entirely: all counts are 1."""
-    if conflict_free:
-        one = jnp.ones((), jnp.float32)
-        return one, one, one, one
-    si, sj = _collision_scales(p, bt)
-    return si, sj, si[:, None], sj[:, None]
+def _mf_deltas(bt: Batch, e, ui, vj, hp: Hyper, decay, si_c, sj_c):
+    """(du, dv) for the CUSGD++ update — shared by both layouts."""
+    gu = hp.a_u * decay
+    gv = hp.a_v * decay
+    vmask = bt.valid[:, None]
+    du = gu * (e[:, None] * vj - hp.l_u * ui) * vmask * si_c
+    dv = gv * (e[:, None] * ui - hp.l_v * vj) * vmask * sj_c
+    return du, dv
+
+
+def _culsh_deltas(bt: Batch, e, aux, b_i, bh_j, ui, vj, wj, cj, hp: Hyper,
+                  decay, si, sj, si_c, sj_c):
+    """The six Eq. (5) parameter deltas from row-aligned gathered operands
+    — shared by the unpacked and packed steps so the two layouts are
+    bit-identical by construction."""
+    d = decay
+    vmask = bt.valid[:, None]
+    db = hp.a_b * d * (e - hp.l_b * b_i) * bt.valid * si
+    dbh = hp.a_bh * d * (e - hp.l_bh * bh_j) * bt.valid * sj
+    du = hp.a_u * d * (e[:, None] * vj - hp.l_u * ui) * vmask * si_c
+    dv = hp.a_v * d * (e[:, None] * ui - hp.l_v * vj) * vmask * sj_c
+    # w_{j,k} ← w + γw(|R|^{-1/2}·e·(r_nb − b̄_nb) − λw·w) on explicit slots
+    dw = (aux["sR"][:, None] * e[:, None] * aux["resid"] - hp.l_w * wj) * bt.expl
+    dc = (aux["sN"][:, None] * e[:, None] - hp.l_c * cj) * bt.impl
+    dw = hp.a_w * d * dw * vmask * sj_c
+    dc = hp.a_c * d * dc * vmask * sj_c
+    return db, dbh, du, dv, dw, dc
 
 
 def mf_step(p: Params, bt: Batch, hp: Hyper, decay, bce: bool = False,
             conflict_free: bool = False) -> Params:
-    """CUSGD++: u_i ← u_i + γ(e·v_j − λu·u_i);  v symmetric."""
+    """CUSGD++: u_i ← u_i + γ(e·v_j − λu·u_i);  v symmetric.  Unpacked
+    reference layout — the hot path is `mf_step_packed`."""
     e = _error(bt.r, predict_mf(p, bt), bce) * bt.valid
     ui, vj = p.U[bt.i], p.V[bt.j]
-    _, _, si_c, sj_c = _scales(p, bt, conflict_free)
-    gu = hp.a_u * decay
-    gv = hp.a_v * decay
-    vmask = bt.valid[:, None]
-    U = p.U.at[bt.i].add(gu * (e[:, None] * vj - hp.l_u * ui) * vmask * si_c)
-    V = p.V.at[bt.j].add(gv * (e[:, None] * ui - hp.l_v * vj) * vmask * sj_c)
-    return dataclasses.replace(p, U=U, V=V)
+    _, _, si_c, sj_c = _batch_scales(p.U.shape[0], p.V.shape[0], bt,
+                                     conflict_free, None)
+    du, dv = _mf_deltas(bt, e, ui, vj, hp, decay, si_c, sj_c)
+    return dataclasses.replace(p, U=p.U.at[bt.i].add(du),
+                               V=p.V.at[bt.j].add(dv))
+
+
+def mf_step_packed(pp: PackedParams, bt: Batch, hp: Hyper, decay,
+                   bce: bool = False, conflict_free: bool = False,
+                   scales=None) -> PackedParams:
+    """CUSGD++ on the packed planes: one gather + one scatter per side,
+    touching only the U/V columns.  Bit-identical to `mf_step` (same
+    delta computation on the same gathered values)."""
+    F = pp.F
+    ui = pp.row[bt.i, :F]
+    vj = pp.col[bt.j, :F]
+    e = _error(bt.r, jnp.sum(ui * vj, 1), bce) * bt.valid
+    _, _, si_c, sj_c = _batch_scales(pp.row.shape[0], pp.col.shape[0], bt,
+                                     conflict_free, scales)
+    du, dv = _mf_deltas(bt, e, ui, vj, hp, decay, si_c, sj_c)
+    return dataclasses.replace(pp, row=pp.row.at[bt.i, :F].add(du),
+                               col=pp.col.at[bt.j, :F].add(dv))
 
 
 def culsh_step(p: Params, bt: Batch, hp: Hyper, decay,
                bce: bool = False, conflict_free: bool = False,
                bh_nb: jax.Array | None = None) -> Params:
     """CULSH-MF: the fused Eq. (5) update of {b, b̂, U, V, W, C}.
+
+    Unpacked reference layout (six scatters) — the scheduled hot path is
+    `culsh_step_packed`, which shares this function's forward and delta
+    computation and must stay bit-identical to it (tested).
 
     With ``conflict_free`` (static) the batch is promised to touch each i
     and each j at most once (the D×D-block invariant), making the summed
@@ -116,25 +180,48 @@ def culsh_step(p: Params, bt: Batch, hp: Hyper, decay,
     `model.predict` — the shard-tier stale-read)."""
     pred, aux = predict(p, bt, bh_nb=bh_nb)
     e = _error(bt.r, pred, bce) * bt.valid
-    vmask = bt.valid[:, None]
-    ui, vj = p.U[bt.i], p.V[bt.j]
-    si, sj, si_c, sj_c = _scales(p, bt, conflict_free)
+    si, sj, si_c, sj_c = _batch_scales(p.U.shape[0], p.V.shape[0], bt,
+                                       conflict_free, None)
+    db, dbh, du, dv, dw, dc = _culsh_deltas(
+        bt, e, aux, p.b[bt.i], p.bh[bt.j], p.U[bt.i], p.V[bt.j],
+        p.W[bt.j], p.C[bt.j], hp, decay, si, sj, si_c, sj_c)
+    return dataclasses.replace(
+        p, b=p.b.at[bt.i].add(db), bh=p.bh.at[bt.j].add(dbh),
+        U=p.U.at[bt.i].add(du), V=p.V.at[bt.j].add(dv),
+        W=p.W.at[bt.j].add(dw), C=p.C.at[bt.j].add(dc))
 
-    d = decay
-    b = p.b.at[bt.i].add(hp.a_b * d * (e - hp.l_b * p.b[bt.i]) * bt.valid * si)
-    bh = p.bh.at[bt.j].add(hp.a_bh * d * (e - hp.l_bh * p.bh[bt.j])
-                           * bt.valid * sj)
-    U = p.U.at[bt.i].add(hp.a_u * d * (e[:, None] * vj - hp.l_u * ui) * vmask
-                         * si_c)
-    V = p.V.at[bt.j].add(hp.a_v * d * (e[:, None] * ui - hp.l_v * vj) * vmask
-                         * sj_c)
-    # w_{j,k} ← w + γw(|R|^{-1/2}·e·(r_nb − b̄_nb) − λw·w) on explicit slots
-    wj, cj = p.W[bt.j], p.C[bt.j]
-    dw = (aux["sR"][:, None] * e[:, None] * aux["resid"] - hp.l_w * wj) * bt.expl
-    dc = (aux["sN"][:, None] * e[:, None] - hp.l_c * cj) * bt.impl
-    W = p.W.at[bt.j].add(hp.a_w * d * dw * vmask * sj_c)
-    C = p.C.at[bt.j].add(hp.a_c * d * dc * vmask * sj_c)
-    return dataclasses.replace(p, b=b, bh=bh, U=U, V=V, W=W, C=C)
+
+def culsh_step_packed(pp: PackedParams, bt: Batch, hp: Hyper, decay,
+                      bce: bool = False, conflict_free: bool = False,
+                      bh_nb: jax.Array | None = None,
+                      scales=None) -> PackedParams:
+    """CULSH-MF on the packed planes: the six scatters of `culsh_step`
+    become one [B, F+1] row-plane scatter and one [B, F+2K+1] col-plane
+    scatter (the per-sample payload is identical — packing only fuses the
+    ops).  Bit-identical to `culsh_step` by shared-helper construction.
+
+    ``scales`` optionally supplies the precomputed (si, sj) collision
+    normalizers (`EpochSchedule.lo_scale_*`) for the scheduled leftover
+    batches; ``bh_nb`` is the shard-tier epoch-start b̂ snapshot gather."""
+    F, K = pp.F, pp.K
+    row = pp.row[bt.i]                                     # [B, F+1]
+    col = pp.col[bt.j]                                     # [B, F+2K+1]
+    ui, b_i = row[:, :F], row[:, F]
+    vj, wj = col[:, :F], col[:, F:F + K]
+    cj, bh_j = col[:, F + K:F + 2 * K], col[:, F + 2 * K]
+    bh_of_nb = pp.col[bt.nb, F + 2 * K] if bh_nb is None else bh_nb
+    pred, aux = predict_gathered(pp.mu, b_i, bh_j, ui, vj, wj, cj,
+                                 bh_of_nb, bt.rnb, bt.expl, bt.impl)
+    e = _error(bt.r, pred, bce) * bt.valid
+    si, sj, si_c, sj_c = _batch_scales(pp.row.shape[0], pp.col.shape[0], bt,
+                                       conflict_free, scales)
+    db, dbh, du, dv, dw, dc = _culsh_deltas(
+        bt, e, aux, b_i, bh_j, ui, vj, wj, cj, hp, decay, si, sj, si_c, sj_c)
+    return dataclasses.replace(
+        pp,
+        row=pp.row.at[bt.i].add(jnp.concatenate([du, db[:, None]], axis=1)),
+        col=pp.col.at[bt.j].add(
+            jnp.concatenate([dv, dw, dc, dbh[:, None]], axis=1)))
 
 
 @partial(jax.jit, static_argnames=("batch", "mf_only", "bce"),
@@ -163,166 +250,217 @@ def train_epoch(p: Params, sp: SparseMatrix, JK: jax.Array, key: jax.Array,
     return p
 
 
-def _cf_scan(p: Params, sd: ScheduledData, starts, valid, hp, decay, *,
+def _cf_scan(pp: PackedParams, sd: ScheduledData, starts, valid, hp, decay, *,
              width: int, mf_only: bool, bce: bool, conflict_free: bool,
              use_kernels: bool, impl: str, interpret: bool, tile_b: int,
-             bh_nb_src: jax.Array | None = None) -> Params:
-    """Scan one schedule tier: contiguous window assembly + fused step.
+             bh_nb_src: jax.Array | None = None,
+             scales=None) -> PackedParams:
+    """Scan one schedule tier: contiguous window assembly + packed step.
 
     ``bh_nb_src`` (an epoch-start b̂ snapshot) switches the neighbour
     baselines to the shard-tier stale-read semantics — the single-device
     replay of a block-aligned tier must match `jax.shard_map` bit-for-bit,
     and under sharding the live b̂ of other devices' col blocks simply
-    does not exist locally."""
+    does not exist locally.  ``scales`` carries the per-batch precomputed
+    collision normalizers for the leftover tier."""
 
     valid = valid.astype(jnp.float32)   # once per tier, not per scan step
+    xs = ((starts, valid) if scales is None
+          else (starts, valid, scales[0], scales[1]))
 
-    def body(pp, sv):
-        s, val = sv
+    def body(p_, sv):
+        if scales is None:
+            s, val = sv
+            sc = None
+        else:
+            s, val, si, sj = sv
+            sc = (si, sj)
         bt = slice_batch(sd, s, width, val)
         bh_nb = None if bh_nb_src is None else bh_nb_src[bt.nb]
         if use_kernels and conflict_free and bh_nb is None:
             if mf_only:
-                pp = apply_mf_sgd(pp, bt.i, bt.j, bt.r, bt.valid, hp, decay,
-                                  impl=impl, tile_b=tile_b,
-                                  interpret=interpret, bce=bce)
+                p_ = apply_mf_sgd(p_, bt, hp, decay, impl=impl,
+                                  tile_b=tile_b, interpret=interpret, bce=bce)
             else:
-                pp = apply_culsh_sgd(pp, bt, hp, decay, impl=impl,
+                p_ = apply_culsh_sgd(p_, bt, hp, decay, impl=impl,
                                      tile_b=tile_b, interpret=interpret,
                                      bce=bce)
         elif mf_only:
-            pp = mf_step(pp, bt, hp, decay, bce, conflict_free=conflict_free)
+            p_ = mf_step_packed(p_, bt, hp, decay, bce,
+                                conflict_free=conflict_free, scales=sc)
         else:
-            pp = culsh_step(pp, bt, hp, decay, bce,
-                            conflict_free=conflict_free, bh_nb=bh_nb)
-        return pp, None
+            p_ = culsh_step_packed(p_, bt, hp, decay, bce,
+                                   conflict_free=conflict_free, bh_nb=bh_nb,
+                                   scales=sc)
+        return p_, None
 
-    p, _ = jax.lax.scan(body, p, (starts, valid))
-    return p
+    pp, _ = jax.lax.scan(body, pp, xs)
+    return pp
 
 
-def _shard_round_shuffle(sched: EpochSchedule, key: jax.Array):
+_SHD_FIELDS = ("i", "j", "r", "nb", "rnb", "expl")
+
+
+def _shard_round_shuffle(shd: ShardData, sched: EpochSchedule, key):
     """Per-epoch round permutation for the block-aligned tier.
 
     Rounds are permuted *within* each sub-epoch, identically across
     devices: batches at the same (s, r) touch disjoint blocks by
     construction, so any common round order preserves both
-    conflict-freedom and single-device/shard-map parity."""
+    conflict-freedom and single-device/shard-map parity.  Returns the
+    round-permuted (ShardData, valid)."""
     D, S, R = sched.shard_starts.shape
     if R == 0:
-        return sched.shard_starts, sched.shard_valid
+        return shd, sched.shard_valid
     perms = jax.vmap(lambda k: jax.random.permutation(k, R))(
         jax.random.split(key, S))                      # [S, R]
-    starts = jnp.take_along_axis(sched.shard_starts, perms[None], axis=2)
-    valid = jnp.take_along_axis(
-        sched.shard_valid, perms[None, :, :, None], axis=2)
-    return starts, valid
+
+    def prm(a):
+        idx = perms.reshape((1, S, R) + (1,) * (a.ndim - 3))
+        return jnp.take_along_axis(a, idx, axis=2)
+
+    return jax.tree.map(prm, shd), prm(sched.shard_valid)
 
 
-def _sharded_tier(p: Params, sd: ScheduledData, sched: EpochSchedule,
-                  starts, valid, hp: Hyper, decay, mesh, *,
-                  mf_only: bool, bce: bool) -> Params:
+def _cell_batch(bi, bj, br, bnb, brnb, bexpl, val) -> Batch:
+    """A dense ShardData cell *is* the batch — no window slicing."""
+    return Batch(i=bi, j=bj, r=br, nb=bnb, rnb=brnb, expl=bexpl,
+                 impl=1.0 - bexpl, valid=val)
+
+
+def _shard_replay(pp: PackedParams, shd: ShardData, valid,
+                  sched: EpochSchedule, hp: Hyper, decay, *,
+                  mf_only: bool, bce: bool) -> PackedParams:
+    """Single-device replay of the shard tier in the identical (s, r, d)
+    cell order and with the identical epoch-start b̂ snapshot — bit-equal
+    to the `jax.shard_map` path (a step's D cells touch disjoint
+    parameter blocks, so sequential scatter == parallel block update)."""
+    D, S, R = sched.shard_starts.shape
+    bh0 = None if mf_only else pp.bh
+    flat = lambda a: jnp.moveaxis(a, 0, 2).reshape((S * R * D,) + a.shape[3:])
+    xs = tuple(flat(getattr(shd, f)) for f in _SHD_FIELDS) + (
+        flat(valid.astype(jnp.float32)),)
+
+    def body(p_, sv):
+        bt = _cell_batch(*sv)
+        if mf_only:
+            p_ = mf_step_packed(p_, bt, hp, decay, bce, conflict_free=True)
+        else:
+            p_ = culsh_step_packed(p_, bt, hp, decay, bce, conflict_free=True,
+                                   bh_nb=bh0[bt.nb])
+        return p_, None
+
+    pp, _ = jax.lax.scan(body, pp, xs)
+    return pp
+
+
+def _sharded_tier(pp: PackedParams, shd: ShardData, valid,
+                  sched: EpochSchedule, hp: Hyper, decay, mesh, *,
+                  mf_only: bool, bce: bool) -> PackedParams:
     """Run the block-aligned tier under `jax.shard_map` (cuMF rotation).
 
     Device ``d`` scans sub-epoch ``s``'s rounds for block ``((d+s)%D, d)``:
-    V/b̂/W/C col blocks stay put, U/b row blocks ring-rotate once per
-    sub-epoch (`ppermute` — the only collective; no psum anywhere, and
-    after D rotations every row block is back home so the out-specs
-    reassemble the params positionally).  The schedule data stays
-    replicated (windows are cheap slices); neighbour baselines b̂[nb] use
-    the epoch-start snapshot ``bh0`` since neighbour cols cross block
-    boundaries.  Params must be padded to D·block_rows / D·block_cols.
-    """
+    the col plane (V/W/C/b̂ blocks) stays put, the row plane (U/b blocks)
+    ring-rotates once per sub-epoch — a *single* `ppermute` per rotation
+    now that U and b travel in one packed plane, and after D rotations
+    every row block is back home so the out-specs reassemble the planes
+    positionally.  The `ShardData` cells shard with the device axis
+    (``P("shard")``): each device holds only its own cells' triples.
+    Neighbour baselines b̂[nb] use the epoch-start snapshot ``bh0`` since
+    neighbour cols cross block boundaries.  Planes must be in the
+    schedule's block-padded id space (`model.remap_params`)."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     D = sched.shards
     mB, nB = sched.block_rows, sched.block_cols
-    Wsh = sched.shard_width
-    bh0 = p.bh
+    F, K = pp.F, pp.K
+    bh0 = pp.bh
     blocks = lambda a, nb: a.reshape((D, nb) + a.shape[1:])
 
-    def device_fn(Ub, bb, Vb, bhb, Wb, Cb, mu, bh0, decay, starts_d, valid_d):
+    def device_fn(rowb, colb, mu, bh0, decay, shd_d, valid_d):
         d = jax.lax.axis_index("shard")
-        Ub, bb, Vb, bhb, Wb, Cb = (a[0] for a in (Ub, bb, Vb, bhb, Wb, Cb))
-        starts_d, valid_d = starts_d[0], valid_d[0]
+        rowb, colb = rowb[0], colb[0]
+        data = jax.tree.map(lambda a: a[0], shd_d)
+        valid_d = valid_d[0].astype(jnp.float32)
         col0 = d * nB
 
         def make_step(row0):
             def step(carry, sv):
-                Ub, bb, Vb, bhb, Wb, Cb = carry
-                s, val = sv
-                bt = slice_batch(sd, s, Wsh, val)
+                rowp, colp = carry
+                bt = _cell_batch(*sv)
                 ok = ((bt.i >= row0) & (bt.i < row0 + mB)
                       & (bt.j >= col0) & (bt.j < col0 + nB))
                 bt = dataclasses.replace(
                     bt, i=jnp.clip(bt.i - row0, 0, mB - 1),
                     j=jnp.clip(bt.j - col0, 0, nB - 1),
                     valid=bt.valid * ok)
-                pl = Params(U=Ub, V=Vb, b=bb, bh=bhb, W=Wb, C=Cb, mu=mu)
+                pl = PackedParams(row=rowp, col=colp, mu=mu, F=F, K=K)
                 if mf_only:
-                    pl = mf_step(pl, bt, hp, decay, bce, conflict_free=True)
+                    pl = mf_step_packed(pl, bt, hp, decay, bce,
+                                        conflict_free=True)
                 else:
-                    pl = culsh_step(pl, bt, hp, decay, bce,
-                                    conflict_free=True, bh_nb=bh0[bt.nb])
-                return (pl.U, pl.b, pl.V, pl.bh, pl.W, pl.C), None
+                    pl = culsh_step_packed(pl, bt, hp, decay, bce,
+                                           conflict_free=True,
+                                           bh_nb=bh0[bt.nb])
+                return (pl.row, pl.col), None
             return step
 
         ring = [(i, (i - 1) % D) for i in range(D)]
         for s in range(D):
             row0 = ((d + s) % D) * mB
-            (Ub, bb, Vb, bhb, Wb, Cb), _ = jax.lax.scan(
-                make_step(row0), (Ub, bb, Vb, bhb, Wb, Cb),
-                (starts_d[s], valid_d[s]))
-            Ub = jax.lax.ppermute(Ub, "shard", ring)
-            bb = jax.lax.ppermute(bb, "shard", ring)
-        return tuple(a[None] for a in (Ub, bb, Vb, bhb, Wb, Cb))
+            xs = tuple(getattr(data, f)[s] for f in _SHD_FIELDS) + (
+                valid_d[s],)
+            (rowb, colb), _ = jax.lax.scan(make_step(row0), (rowb, colb), xs)
+            rowb = jax.lax.ppermute(rowb, "shard", ring)
+        return rowb[None], colb[None]
 
-    sh = lambda *rest: P("shard", *rest)
+    sh = P("shard")
     fn = shard_map(
         device_fn, mesh=mesh,
-        in_specs=(sh(None, None), sh(None), sh(None, None), sh(None),
-                  sh(None, None), sh(None, None), P(), P(), P(),
-                  sh(None, None), sh(None, None, None)),
-        out_specs=(sh(None, None), sh(None), sh(None, None), sh(None),
-                   sh(None, None), sh(None, None)))
-    U, b, V, bh, W, C = fn(blocks(p.U, mB), blocks(p.b, mB),
-                           blocks(p.V, nB), blocks(p.bh, nB),
-                           blocks(p.W, nB), blocks(p.C, nB),
-                           p.mu, bh0, decay, starts, valid)
+        in_specs=(sh, sh, P(), P(), P(), sh, sh),
+        out_specs=(sh, sh))
+    row, col = fn(blocks(pp.row, mB), blocks(pp.col, nB), pp.mu, bh0, decay,
+                  shd, valid)
     unb = lambda a: a.reshape((-1,) + a.shape[2:])
-    return Params(U=unb(U), V=unb(V), b=unb(b), bh=unb(bh),
-                  W=unb(W), C=unb(C), mu=p.mu)
+    return dataclasses.replace(pp, row=unb(row), col=unb(col))
 
 
 @partial(jax.jit,
          static_argnames=("mf_only", "bce", "use_kernels", "impl",
                           "interpret", "tile_b", "mesh"),
-         donate_argnames=("p",))
-def train_epoch_scheduled(p: Params, sd: ScheduledData,
+         donate_argnames=("pp",))
+def train_epoch_scheduled(pp: PackedParams, sd: ScheduledData,
                           sched: EpochSchedule, key: jax.Array,
                           epoch: jax.Array, hp: Hyper, *,
+                          shd: ShardData | None = None,
                           mf_only: bool = False, bce: bool = False,
                           use_kernels: bool = False, impl: str = "ref",
                           interpret: bool = True, tile_b: int = 256,
-                          mesh=None) -> Params:
+                          mesh=None) -> PackedParams:
     """One epoch over a tiered conflict-free schedule (the offline hot path).
 
     cuMF_SGD's conflict-free fine-grained SGD, tiered and laid out for the
     compiler:
 
+    * parameters live in the two packed planes (`model.PackedParams`), so
+      every step is two gather/scatter pairs, not six;
     * batch assembly is a contiguous `dynamic_slice` of the schedule-
       ordered `ScheduledData` — no per-batch gather or binary search;
-    * the block-aligned shard tier (if `sched.shards > 1`) runs first —
-      under `jax.shard_map` over ``mesh`` when given, otherwise replayed
-      sequentially in the identical (s, r, d) order (exact parity: the D
-      batches of a step touch disjoint parameter blocks);
+    * the block-aligned shard tier (if the schedule has one) runs first
+      over the dense `ShardData` cells (pass ``shd``) — under
+      `jax.shard_map` over ``mesh`` when given (cells sharded with the
+      device axis), otherwise replayed sequentially in the identical
+      (s, r, d) order (exact parity: the D batches of a step touch
+      disjoint parameter blocks);
     * each width tier is one `lax.scan` of exact Eq. (5) steps (static
       shapes per tier), optionally through the fused `kernels/mf_sgd`
       step (``use_kernels``; ``impl`` pre-resolved via `ops.resolve_impl`
       outside jit, tile auto-clamped to the tier width);
-    * leftover batches (zipf heads) fall back to the scaled summed step;
-    * ``p`` is donated so parameters update in place across epochs.
+    * leftover batches (zipf heads) fall back to the scaled summed step
+      with their collision normalizers precomputed in the schedule
+      (`lo_scale_*`) — no per-batch O(M)+O(N) recount;
+    * ``pp`` is donated so parameters update in place across epochs.
 
     Batch order is reshuffled every epoch (conflict-freedom is invariant
     under batch permutation); within-batch composition is fixed per fit.
@@ -332,22 +470,18 @@ def train_epoch_scheduled(p: Params, sd: ScheduledData,
     kw = dict(mf_only=mf_only, bce=bce, use_kernels=use_kernels, impl=impl,
               interpret=interpret)
 
-    if sched.shard_starts.size:
-        starts, valid = _shard_round_shuffle(sched, keys[0])
+    if sched.shard_span:
+        if shd is None:
+            raise ValueError("schedule has a shard tier — pass "
+                             "shd=model.build_shard_data(...)")
+        shd_p, valid_p = _shard_round_shuffle(shd, sched, keys[0])
         if mesh is not None:
-            p = _sharded_tier(p, sd, sched, starts, valid, hp, decay, mesh,
-                              mf_only=mf_only, bce=bce)
+            pp = _sharded_tier(pp, shd_p, valid_p, sched, hp, decay, mesh,
+                               mf_only=mf_only, bce=bce)
         else:
             # same cells, same (s, r, d) order, same b̂ snapshot → parity
-            D, S, R = starts.shape
-            flat_s = jnp.transpose(starts, (1, 2, 0)).reshape(S * R * D)
-            flat_v = jnp.transpose(valid, (1, 2, 0, 3)).reshape(
-                S * R * D, sched.shard_width)
-            p = _cf_scan(p, sd, flat_s, flat_v, hp, decay,
-                         width=sched.shard_width, conflict_free=True,
-                         tile_b=tile_b,
-                         bh_nb_src=None if mf_only else p.bh,
-                         **kw | dict(use_kernels=False))
+            pp = _shard_replay(pp, shd_p, valid_p, sched, hp, decay,
+                               mf_only=mf_only, bce=bce)
 
     for t, (starts, valid) in enumerate(zip(sched.tier_starts,
                                             sched.tier_valid)):
@@ -357,13 +491,16 @@ def train_epoch_scheduled(p: Params, sd: ScheduledData,
         # tile_b passes through unclamped: kernel._clamp_tile aligns the
         # tile to the batch rounded up to the sublane multiple, which a
         # min() against a non-power-of-two tier width would defeat
-        p = _cf_scan(p, sd, starts[order], valid[order], hp, decay,
-                     width=sched.widths[t], conflict_free=True,
-                     tile_b=tile_b, **kw)
+        pp = _cf_scan(pp, sd, starts[order], valid[order], hp, decay,
+                      width=sched.widths[t], conflict_free=True,
+                      tile_b=tile_b, **kw)
 
     if sched.lo_starts.shape[0]:
         order = jax.random.permutation(keys[1], sched.lo_starts.shape[0])
-        p = _cf_scan(p, sd, sched.lo_starts[order], sched.lo_valid[order],
-                     hp, decay, width=sched.widths[0], conflict_free=False,
-                     tile_b=tile_b, **kw | dict(use_kernels=False))
-    return p
+        pp = _cf_scan(pp, sd, sched.lo_starts[order], sched.lo_valid[order],
+                      hp, decay, width=sched.widths[0], conflict_free=False,
+                      tile_b=tile_b,
+                      scales=(sched.lo_scale_i[order],
+                              sched.lo_scale_j[order]),
+                      **kw | dict(use_kernels=False))
+    return pp

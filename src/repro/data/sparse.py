@@ -168,10 +168,10 @@ class EpochSchedule:
 
     The schedule is a *layout*, not just a batching: ``order`` permutes the
     triple indices so that every batch of every tier is a **contiguous
-    window** of the schedule-ordered arrays (`model.build_scheduled_data`).
-    Batch assembly at train time is a `dynamic_slice` + mask, never a
-    gather — on CPU that is the difference between streaming 34 MB of
-    neighbour cache per epoch and random-probing it.
+    window** of the schedule-ordered arrays.  Batch assembly at train time
+    is a `dynamic_slice` + mask, never a gather — on CPU that is the
+    difference between streaming 34 MB of neighbour cache per epoch and
+    random-probing it.
 
     Three kinds of batches, each a conflict-free set (every row id and
     every col id at most once — the invariant the paper's D×D blocking
@@ -180,38 +180,63 @@ class EpochSchedule:
     * ``shard_*``   — the block-aligned tier (present when ``shards > 1``):
       cell ``(d, s, r)`` is round ``r`` of sub-epoch ``s`` on device ``d``
       and only contains triples of block ``((d+s) % D, d)`` of the D×D
-      `block_partition` grid, so the D batches of a step touch disjoint
-      parameter blocks — `sgd.train_epoch_scheduled` scans them under
-      `jax.shard_map` with one U/b ring-rotation per sub-epoch and no
-      per-step collective.
+      grid cut at ``row_bounds``/``col_bounds`` (equal-**nnz** partitions
+      by default, see `conflict_free_schedule(balance_blocks=...)`), so
+      the D batches of a step touch disjoint parameter blocks —
+      `sgd.train_epoch_scheduled` scans them under `jax.shard_map` with
+      one packed-row-plane ring-rotation per sub-epoch and no per-step
+      collective.  Shard-tier triples occupy schedule positions
+      ``[0, shard_span)`` and are materialized as the **dense, device-
+      shardable** `model.ShardData` cells, not as windows of the
+      replicated `model.ScheduledData`.
     * ``tier_*``    — width-tiered conflict-free batches (``widths[t]``
-      halves per tier) so sparse tail rounds are re-packed narrow instead
-      of being diverted to the scaled fallback.
+      shrinking per tier) so sparse tail rounds are re-packed narrow
+      instead of being diverted to the scaled fallback.
     * ``lo_*``      — the unschedulable residue (zipf heads whose degree
       exceeds the total round budget); scaled-fallback batches at full
-      width.
+      width, with their collision normalizers precomputed into
+      ``lo_scale_*`` (batch composition is fixed per fit, so the counts
+      are schedule constants — no per-batch O(M)+O(N) scatter-count).
 
     Together the three cover every triple exactly once per epoch (``order``
     is a permutation).  Windows may read past a batch's fill into the next
     batch's triples; ``*_valid`` masks them out.
+
+    **Id spaces.**  With ``shards = D > 1`` every consumer of the schedule
+    works in the *block-padded* id space: ``row_map``/``col_map`` send an
+    original id ``g`` of block ``d`` to ``d·block + (g − bounds[d])``, so
+    each block is a contiguous, equal-size ``block_rows``/``block_cols``
+    range (the shape `jax.shard_map` needs) regardless of how unequal the
+    nnz-balanced *original* ranges are.  `model.build_scheduled_data` /
+    `model.build_shard_data` store remapped ids, and parameters must be
+    relaid with `model.remap_params` before training (and `unmap_params`
+    after).  With ``shards == 1`` the maps are empty and ids are the
+    original ones.
     """
 
     order: jax.Array          # [nnz] int32 — schedule position → triple id
-    shard_starts: jax.Array   # [D, S, R] int32 (S == D sub-epochs)
+    shard_starts: jax.Array   # [D, S, R] int32 into [0, shard_span) (S == D)
     shard_valid: jax.Array    # [D, S, R, Wsh] bool
-    tier_starts: tuple        # per tier: [nb_t] int32
+    tier_starts: tuple        # per tier: [nb_t] int32 into the cf region
     tier_valid: tuple         # per tier: [nb_t, widths[t]] bool
-    lo_starts: jax.Array      # [nb_lo] int32
+    lo_starts: jax.Array      # [nb_lo] int32 into the cf region
     lo_valid: jax.Array       # [nb_lo, widths[0]] bool
+    lo_scale_i: jax.Array     # [nb_lo, widths[0]] float32 1/row-count
+    lo_scale_j: jax.Array     # [nb_lo, widths[0]] float32 1/col-count
+    row_bounds: jax.Array     # [D+1] int32 original-id block cuts ([] if D==1)
+    col_bounds: jax.Array     # [D+1] int32 ([] if D==1)
+    row_map: jax.Array        # [M] int32 original → block-padded ([] if D==1)
+    col_map: jax.Array        # [N] int32 ([] if D==1)
     widths: tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
     shard_width: int = dataclasses.field(metadata=dict(static=True))
     shards: int = dataclasses.field(metadata=dict(static=True))
     block_rows: int = dataclasses.field(metadata=dict(static=True))
     block_cols: int = dataclasses.field(metadata=dict(static=True))
+    shard_span: int = dataclasses.field(metadata=dict(static=True))
 
     @property
     def pad_width(self) -> int:
-        """Slack the schedule-ordered arrays need past ``nnz`` so every
+        """Slack the schedule-ordered arrays need past their fill so every
         window slice stays in bounds (widest batch)."""
         return self.widths[0]
 
@@ -220,7 +245,22 @@ class EpochSchedule:
 
         Reports fill for *every* tier and for the leftovers — a 0.5-fill
         narrow tier and a 0.99-fill leftover pool are different perf
-        stories even at equal cf_frac.
+        stories even at equal cf_frac.  Fields:
+
+        * ``n_cf`` / ``n_lo``   — triples scheduled conflict-free (shard +
+          width tiers) vs diverted to the scaled leftover fallback.
+        * ``nb_cf`` / ``nb_lo`` — batch (= scan-step) counts for each.
+        * ``cf_frac``           — n_cf / nnz; the fraction of updates that
+          take the *exact* Eq. (5) step (the bench gate floor is 0.8).
+        * ``fill`` / ``cf_fill`` / ``lo_fill`` — occupied slots / padded
+          slots overall, over the conflict-free batches only, and over
+          the leftover batches only.
+        * ``tiers``             — per width tier: width, rounds, n, fill.
+        * ``shard``             — the block-aligned tier: device count,
+          cell width, rounds (total over the D×D×R grid), n, fill, and
+          ``extent_rows``/``extent_cols`` — the per-block *original* id
+          extents (equal-nnz partitions make these unequal on zipf data;
+          their spread is what the balancing trades for round fill).
         """
         tiers = []
         n_cf = slots_cf = nb_cf = 0
@@ -232,7 +272,11 @@ class EpochSchedule:
             nb_cf += nb_sh
             shard = dict(shards=self.shards, width=self.shard_width,
                          rounds=nb_sh, n=n_sh,
-                         fill=n_sh / max(self.shard_valid.size, 1))
+                         fill=n_sh / max(self.shard_valid.size, 1),
+                         extent_rows=np.diff(
+                             np.asarray(self.row_bounds)).tolist(),
+                         extent_cols=np.diff(
+                             np.asarray(self.col_bounds)).tolist())
         else:
             shard = dict(shards=self.shards, width=self.shard_width,
                          rounds=0, n=0, fill=0.0)
@@ -352,43 +396,102 @@ def _pack_width(pool, rows, cols, width, min_fill, *, passes, window,
     return rounds, budget
 
 
+def _balanced_bounds(counts: np.ndarray, D: int, floor: int = 1) -> np.ndarray:
+    """Equal-weight partition cuts over an id range (host side).
+
+    Returns ``bounds [D+1]`` with block ``d`` = ids ``[bounds[d],
+    bounds[d+1])`` carrying ≈ total/D of ``counts``'s mass (cumsum
+    quantile cuts), subject to every block spanning ≥ ``floor`` ids.
+
+    The floor is load-bearing, not a degenerate-case guard: a conflict-
+    free round inside a block can never be wider than the block's
+    distinct-id extent, so an unconstrained nnz cut on zipf data — whose
+    head block collapses to a handful of ids — would cap head-cell
+    matchings at that handful and blow up the grid-wide round count the
+    other cells are padded to.  Balancing *subject to* extent ≥ the shard
+    round width keeps every cell able to fill its rounds (requires
+    ``len(counts) ≥ D·floor``; the caller clamps).
+    """
+    size = len(counts)
+    floor = max(1, min(floor, size // max(D, 1)))
+    cum = np.cumsum(counts, dtype=np.int64)
+    total = int(cum[-1]) if size else 0
+    bounds = np.zeros(D + 1, np.int64)
+    bounds[D] = size
+    for d in range(1, D):
+        cut = int(np.searchsorted(cum, d * (total / D), side="left")) + 1
+        bounds[d] = min(max(cut, bounds[d - 1] + floor),
+                        size - (D - d) * floor)
+    return bounds
+
+
+def _block_id_map(bounds: np.ndarray, size: int, extent: int) -> np.ndarray:
+    """Original id → block-padded id: ``g ∈ block d ↦ d·extent + (g −
+    bounds[d])``.  Strictly monotone (blocks keep their internal order and
+    never overflow into the next block's range since every block extent
+    ≤ ``extent``)."""
+    ids = np.arange(size, dtype=np.int64)
+    blk = np.searchsorted(bounds, ids, side="right") - 1
+    return (blk * extent + ids - bounds[blk]).astype(np.int64)
+
+
 def conflict_free_schedule(rows, cols, *, batch: int = 512, tiers: int = 4,
                            tier_shrink: float = 0.5,
                            min_fill_frac: float = 0.5, shards: int = 1,
                            M: int | None = None, N: int | None = None,
                            seed: int = 0, passes: int = 5, window: int = 6,
-                           max_rounds: int | None = None) -> EpochSchedule:
+                           max_rounds: int | None = None,
+                           balance_blocks: bool = True) -> EpochSchedule:
     """Tiered conflict-free scheduler (host side, vectorized round-major).
 
     Round-major greedy edge colouring of the bipartite interaction graph:
     each round takes a near-maximal conflict-free matching (capped at the
     tier width) from the priority-ordered pool of unscheduled triples.
-    A round is emitted at a tier only when it would not fit the next
-    tier's width (its fill is therefore ≥ ``tier_shrink``); smaller
-    rounds step the tier down by ``tier_shrink`` instead of being
-    diverted to leftovers, for ``tiers`` shrinks — finer ladders
-    (``tier_shrink`` ≈ 0.7) trade a few extra scans for tighter packing.
-    The last tier keeps ``min_fill_frac·width`` — the measured CPU
-    break-even between padded conflict-free work and the leftover path's
-    collision rescaling; only below it does the residue (zipf heads whose
-    degree exceeds the total round count) become scaled-fallback
-    leftovers.
+
+    Knobs:
+
+    * ``batch``        — tier-0 (widest) conflict-free batch width; auto-
+      clamped to ``min(M, N)`` since a conflict-free batch holds each
+      row/col at most once.
+    * ``tiers`` / ``tier_shrink`` — the width ladder: a round is emitted
+      at a tier only when it would not fit the next tier's width (its
+      fill is therefore ≥ ``tier_shrink``); smaller rounds step the tier
+      down by ``tier_shrink`` instead of being diverted to leftovers.
+      Finer ladders (``tier_shrink`` ≈ 0.7) trade a few extra scans for
+      tighter packing; the bench scales use 7–9 tiers at 0.71.
+    * ``min_fill_frac`` — the *last* tier keeps rounds down to
+      ``min_fill_frac·width`` (the measured CPU break-even between padded
+      conflict-free work and the leftover path's collision rescaling);
+      only below it does the residue (zipf heads whose degree exceeds the
+      total round count) become scaled-fallback leftovers, whose
+      per-batch collision normalizers are precomputed here into
+      ``lo_scale_*``.
+    * ``passes`` / ``window`` — matching effort per round: how many
+      `np.unique` first-occurrence sweeps over how many candidate
+      triples (``window × width``).
+    * ``max_rounds``   — hard budget on emitted rounds (default: generous
+      multiple of nnz/width; a safety valve, not a tuning knob).
 
     Priority = (arrival rank within the triple's row/col under a random
     shuffle, heaviest endpoints first): a window prefix then spans many
     distinct rows/cols (so matchings are wide) while heads — which need
-    the most distinct rounds — always get a slot first.  All probes are
-    numpy `unique`/mask sweeps over O(window·width) candidates per round;
-    prep is reported by the trainer in ``schedule_stats`` so its
-    amortization over epochs is visible next to sec/epoch.
+    the most distinct rounds — always get a slot first.  Input order must
+    NOT leak into the ranking: lexsorted input + zipf-sorted ids would
+    hand every low rank to head rows and starve the matching.
 
-    With ``shards = D > 1`` a block-aligned tier is carved first: triples
-    are partitioned by the D×D `block_partition` grid over row/col id
-    ranges padded to a multiple of D, and cell ``(s, d)`` (sub-epoch,
-    device) is scheduled independently at the shard width so device ``d``
-    processes block ``((d+s) % D, d)`` — the cuMF_SGD rotation that lets
+    With ``shards = D > 1`` a block-aligned tier is carved first: row/col
+    ids are cut into D ranges at ``row_bounds``/``col_bounds`` —
+    **equal-nnz** cumsum quantiles by default (``balance_blocks=True``),
+    equal-id-range otherwise — and cell ``(s, d)`` (sub-epoch, device) is
+    scheduled independently at the shard width so device ``d`` processes
+    block ``((d+s) % D, d)``: the cuMF_SGD rotation that lets
     `jax.shard_map` scan all D cells of a step in parallel with no
-    collective.  Cell residue falls through to the ordinary tiers.
+    collective.  Cells are padded to the max round count over the grid,
+    so equal-id-range cuts on zipf data leave head-block rounds empty;
+    nnz balancing equalizes per-cell round counts and recovers that fill.
+    The unequal original ranges are then re-laid as equal ``block_rows``/
+    ``block_cols`` ranges in the block-padded id space (``row_map``/
+    ``col_map``).  Cell residue falls through to the ordinary tiers.
     """
     rows = np.asarray(rows)
     cols = np.asarray(cols)
@@ -459,18 +562,36 @@ def conflict_free_schedule(rows, cols, *, batch: int = 512, tiers: int = 4,
     D = max(1, int(shards))
     mB = nB = 0
     Wsh = widths[0]
+    row_bounds = np.zeros(0, np.int64)
+    col_bounds = np.zeros(0, np.int64)
+    row_map = np.zeros(0, np.int64)
+    col_map = np.zeros(0, np.int64)
     if D > 1 and nnz:
-        mB, nB = -(-M // D), -(-N // D)          # ceil-div block extents
-        rb, cb = block_partition(rows, cols, mB * D, nB * D, D)
+        if balance_blocks:
+            # equal-nnz cumsum quantile cuts, floored at the round width
+            # so no block's matching is extent-limited (see _balanced_bounds)
+            row_bounds = _balanced_bounds(dr, D, floor=min(batch, M // D))
+            col_bounds = _balanced_bounds(dc, D, floor=min(batch, N // D))
+            Wsh = max(1, min(batch, int(np.diff(row_bounds).min()),
+                             int(np.diff(col_bounds).min())))
+        else:                # legacy equal-id-range cuts
+            row_bounds = np.minimum(np.arange(D + 1) * (-(-M // D)), M)
+            col_bounds = np.minimum(np.arange(D + 1) * (-(-N // D)), N)
+            Wsh = max(1, min(batch, -(-M // D), -(-N // D)))
+        mB = int(np.diff(row_bounds).max())      # block-padded extents
+        nB = int(np.diff(col_bounds).max())
+        row_map = _block_id_map(row_bounds, M, mB)
+        col_map = _block_id_map(col_bounds, N, nB)
+        rb = np.searchsorted(row_bounds, rows, side="right") - 1
+        cb = np.searchsorted(col_bounds, cols, side="right") - 1
         cell_of = ((rb - cb) % D) * D + cb       # cell = (s, d) flattened
-        Wsh = max(1, min(batch, mB, nB))
         fill_sh = max(1, int(Wsh * min_fill_frac))
         by_cell = np.argsort(cell_of[priority], kind="stable")
         grouped = priority[by_cell]              # cell-major, priority kept
-        bounds = np.searchsorted(cell_of[grouped], np.arange(D * D + 1))
+        cbounds = np.searchsorted(cell_of[grouped], np.arange(D * D + 1))
         cells = []
         for c0 in range(D * D):
-            pool = _PriorityPool(grouped[bounds[c0]:bounds[c0 + 1]])
+            pool = _PriorityPool(grouped[cbounds[c0]:cbounds[c0 + 1]])
             n_cell = pool.n
             rounds, _ = _pack_width(
                 pool, rows, cols, Wsh, fill_sh, passes=passes, window=window,
@@ -494,8 +615,12 @@ def conflict_free_schedule(rows, cols, *, batch: int = 512, tiers: int = 4,
     else:
         shard_starts = np.zeros((D, D, 0), np.int32)
         shard_valid = np.zeros((D, D, 0, Wsh), bool)
+    shard_span = pos   # schedule positions [0, shard_span) are shard cells
 
     # ---- width-tiered conflict-free rounds -------------------------------
+    # tier/lo starts are rebased to the cf region (positions − shard_span):
+    # shard cells live in the dense, shardable `model.ShardData`, so the
+    # replicated `model.ScheduledData` only holds the cf-region triples
     pool = _PriorityPool(priority)
     budget = max_rounds if max_rounds is not None else 8 * max(nnz, 1) // widths[-1] + 64
     tier_starts, tier_valid = [], []
@@ -505,15 +630,31 @@ def conflict_free_schedule(rows, cols, *, batch: int = 512, tiers: int = 4,
             passes=passes, window=window, row_used=row_used,
             col_used=col_used, budget=budget)
         st, va = layout(rounds, w)
-        tier_starts.append(jnp.asarray(st))
+        tier_starts.append(jnp.asarray(st - shard_span))
         tier_valid.append(jnp.asarray(va))
 
     # ---- scaled-fallback leftovers ---------------------------------------
     lo = pool.drain()
     rng.shuffle(lo)   # decorrelate: priority order packs same-head runs
     W0 = widths[0]
-    lo_starts, lo_valid = layout(
-        [lo[c0:c0 + W0] for c0 in range(0, len(lo), W0)], W0)
+    # pre-sort each chunk by row (the sort `layout` would apply) so the
+    # precomputed collision normalizers stay slot-aligned with the layout
+    chunks = [m[np.argsort(rows[m], kind="stable")]
+              for c0 in range(0, len(lo), W0)
+              for m in (lo[c0:c0 + W0],)]
+    lo_si = np.ones((len(chunks), W0), np.float32)
+    lo_sj = np.ones((len(chunks), W0), np.float32)
+    for b, m in enumerate(chunks):
+        # 1/count per slot — the same normalizer `sgd._collision_scales`
+        # computed per batch on device, now a schedule constant
+        _, inv, cnt = np.unique(rows[m], return_inverse=True,
+                                return_counts=True)
+        lo_si[b, :len(m)] = np.float32(1.0) / cnt.astype(np.float32)[inv]
+        _, inv, cnt = np.unique(cols[m], return_inverse=True,
+                                return_counts=True)
+        lo_sj[b, :len(m)] = np.float32(1.0) / cnt.astype(np.float32)[inv]
+    lo_starts, lo_valid = layout(chunks, W0)
+    lo_starts = lo_starts - shard_span
 
     assert pos == nnz
     order = (np.concatenate(order_parts) if order_parts
@@ -524,17 +665,10 @@ def conflict_free_schedule(rows, cols, *, batch: int = 512, tiers: int = 4,
         shard_valid=jnp.asarray(shard_valid),
         tier_starts=tuple(tier_starts), tier_valid=tuple(tier_valid),
         lo_starts=jnp.asarray(lo_starts), lo_valid=jnp.asarray(lo_valid),
+        lo_scale_i=jnp.asarray(lo_si), lo_scale_j=jnp.asarray(lo_sj),
+        row_bounds=jnp.asarray(row_bounds, jnp.int32),
+        col_bounds=jnp.asarray(col_bounds, jnp.int32),
+        row_map=jnp.asarray(row_map, jnp.int32),
+        col_map=jnp.asarray(col_map, jnp.int32),
         widths=widths, shard_width=int(Wsh), shards=D,
-        block_rows=int(mB), block_cols=int(nB))
-
-
-def block_partition(rows, cols, M, N, D):
-    """MCULSH-MF Fig.5 D×D blocking (host side).
-
-    Returns per-sample (row_block, col_block) ids with contiguous equal-size
-    index ranges, used by the rotation trainer to build its D sub-epoch
-    schedule where device d at step s trains block (d+s mod D, d).
-    """
-    rb = np.minimum(rows * D // M, D - 1)
-    cb = np.minimum(cols * D // N, D - 1)
-    return rb.astype(np.int32), cb.astype(np.int32)
+        block_rows=int(mB), block_cols=int(nB), shard_span=int(shard_span))

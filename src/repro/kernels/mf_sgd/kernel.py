@@ -13,6 +13,15 @@ using the *pre-update* u in the v update exactly like the register-resident
 CUDA kernel (both updates read the same stale operands).  This is the TPU
 image of "keep u_i in registers, fuse dot + update": tile-resident operands,
 one round trip to HBM per row.
+
+The CULSH kernel works on the **packed planes** (`model.PackedParams`):
+its tiles are ``row [TB, F+1]`` = U‖b and ``col [TB, F+2K+1]`` = V‖W‖C‖b̂,
+so the pallas_call carries 7 operands and 2 outputs instead of the 15/6 of
+the pre-packed layout, and the surrounding step is one gather + one
+delta-scatter per plane.  In-kernel the planes are split with *static*
+lane slices; with F and K multiples of 128 every slice is lane-aligned on
+real hardware (the b/b̂ scalar columns are strided single-lane reads
+either way).
 """
 from __future__ import annotations
 
@@ -39,33 +48,43 @@ def _sgd_kernel(bce, u_ref, v_ref, r_ref, valid_ref, hp_ref,
     e_out[...] = e
 
 
-def _culsh_kernel(bce, u_ref, v_ref, w_ref, c_ref, resid_ref, impl_ref,
-                  expl_ref, b_ref, bh_ref, bbar_ref, r_ref, valid_ref,
-                  sR_ref, sN_ref, hp_ref,
-                  b_out, bh_out, u_out, v_out, w_out, c_out):
-    u, v = u_ref[...], v_ref[...]              # [TB, F]
-    w, c = w_ref[...], c_ref[...]              # [TB, K]
-    resid = resid_ref[...]                     # [TB, K] (expl-masked already)
-    impl, expl = impl_ref[...], expl_ref[...]
-    b, bh = b_ref[...], bh_ref[...]            # [TB]
+def _culsh_kernel(bce, row_ref, col_ref, rnb_ref, bhnb_ref, expl_ref,
+                  r_ref, valid_ref, hp_ref, row_out, col_out):
+    row = row_ref[...]                         # [TB, F+1] — U ‖ b
+    col = col_ref[...]                         # [TB, F+2K+1] — V ‖ W ‖ C ‖ b̂
+    rnb = rnb_ref[...]                         # [TB, K]
+    bh_nb = bhnb_ref[...]                      # [TB, K] — b̂[J^K[j]] gather
+    expl = expl_ref[...]
     r, valid = r_ref[...], valid_ref[...]
-    sR, sN = sR_ref[...], sN_ref[...]
+    F = row.shape[-1] - 1
+    K = rnb.shape[-1]
     gb, gbh, gu, gv = hp_ref[0], hp_ref[1], hp_ref[2], hp_ref[3]
     gw, gc = hp_ref[4], hp_ref[5]
     lb, lbh, lu, lv = hp_ref[6], hp_ref[7], hp_ref[8], hp_ref[9]
     lw, lc = hp_ref[10], hp_ref[11]
+    mu = hp_ref[12]
 
-    pred = (bbar_ref[...] + sR * jnp.sum(resid * w, axis=-1)
+    u, b = row[:, :F], row[:, F]
+    v, w = col[:, :F], col[:, F:F + K]
+    c, bh = col[:, F + K:F + 2 * K], col[:, F + 2 * K]
+    impl = 1.0 - expl
+    bbar = mu + b + bh
+    resid = (rnb - (mu + b[:, None] + bh_nb)) * expl
+    nR = jnp.sum(expl, axis=-1)
+    nN = jnp.sum(impl, axis=-1)
+    sR = jnp.where(nR > 0, jax.lax.rsqrt(jnp.maximum(nR, 1.0)), 0.0)
+    sN = jnp.where(nN > 0, jax.lax.rsqrt(jnp.maximum(nN, 1.0)), 0.0)
+    pred = (bbar + sR * jnp.sum(resid * w, axis=-1)
             + sN * jnp.sum(impl * c, axis=-1) + jnp.sum(u * v, axis=-1))
     e = (r - (jax.nn.sigmoid(pred) if bce else pred)) * valid
     eb = e[:, None]
     vm = valid[:, None]
-    b_out[...] = b + gb * (e - lb * b) * valid
-    bh_out[...] = bh + gbh * (e - lbh * bh) * valid
-    u_out[...] = u + gu * (eb * v - lu * u) * vm
-    v_out[...] = v + gv * (eb * u - lv * v) * vm
-    w_out[...] = w + gw * (sR[:, None] * eb * resid - lw * w) * expl * vm
-    c_out[...] = c + gc * (sN[:, None] * eb - lc * c) * impl * vm
+    row_out[:, :F] = u + gu * (eb * v - lu * u) * vm
+    row_out[:, F] = b + gb * (e - lb * b) * valid
+    col_out[:, :F] = v + gv * (eb * u - lv * v) * vm
+    col_out[:, F:F + K] = w + gw * (sR[:, None] * eb * resid - lw * w) * expl * vm
+    col_out[:, F + K:F + 2 * K] = c + gc * (sN[:, None] * eb - lc * c) * impl * vm
+    col_out[:, F + 2 * K] = bh + gbh * (e - lbh * bh) * valid
 
 
 def _clamp_tile(tile_b: int, B: int) -> int:
@@ -76,48 +95,45 @@ def _clamp_tile(tile_b: int, B: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("tile_b", "interpret", "bce"))
-def culsh_sgd_step(b_i, bh_j, u, v, w, c, resid, impl, expl, bbar, r, valid,
-                   sR, sN, hp, *, tile_b: int = 256, interpret: bool = True,
+def culsh_sgd_step(row, col, rnb, bh_nb, expl, r, valid, hp, *,
+                   tile_b: int = 256, interpret: bool = True,
                    bce: bool = False):
-    """Fused six-parameter CULSH-MF step (paper Alg. 3, update rule Eq. 5).
+    """Fused six-parameter CULSH-MF step (paper Alg. 3, update rule Eq. 5)
+    on packed plane tiles.
 
-    One VMEM pass per batch tile computes the Eq. (1) forward *and* all six
-    parameter deltas — the TPU image of the paper's register-resident CUDA
-    kernel, which the load-balance property of §4.2(2) (every sample touches
-    exactly K of the 2K {w, c} slots) keeps dense.  Batch must be
-    conflict-free but may have any width (every schedule tier routes
-    through here; the tile is clamped to the batch).  All operands are
-    row-aligned (gathers happen in `ops`).  ``hp`` packs the 12 decayed
-    scalars (see `ref.culsh_sgd_step_ref`).
+    One VMEM pass per batch tile computes the Eq. (1) forward *and* both
+    updated parameter planes — the TPU image of the paper's register-
+    resident CUDA kernel, which the load-balance property of §4.2(2)
+    (every sample touches exactly K of the 2K {w, c} slots) keeps dense.
+    Batch must be conflict-free but may have any width (every schedule
+    tier routes through here; the tile is clamped to the batch).
+    Operand layout and the ``hp`` 13-vector are documented on
+    `ref.culsh_sgd_step_ref`; plane gathers/scatters happen in `ops`.
     """
-    B, F = u.shape
-    K = w.shape[1]
+    B = row.shape[0]
+    F = row.shape[1] - 1
+    K = rnb.shape[1]
     tile_b = _clamp_tile(tile_b, B)
     pad = (-B) % tile_b
     if pad:
         padded = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
-        b_i, bh_j, u, v, w, c, resid, impl, expl, bbar, r, valid, sR, sN = map(
-            padded, (b_i, bh_j, u, v, w, c, resid, impl, expl, bbar, r, valid,
-                     sR, sN))
-    Bp = u.shape[0]
+        row, col, rnb, bh_nb, expl, r, valid = map(
+            padded, (row, col, rnb, bh_nb, expl, r, valid))
+    Bp = row.shape[0]
     mat = lambda d: pl.BlockSpec((tile_b, d), lambda i: (i, 0))
     vec = pl.BlockSpec((tile_b,), lambda i: (i,))
-    hp_spec = pl.BlockSpec((12,), lambda i: (0,))
+    hp_spec = pl.BlockSpec((13,), lambda i: (0,))
     outs = pl.pallas_call(
         functools.partial(_culsh_kernel, bce),
         grid=(Bp // tile_b,),
-        in_specs=[mat(F), mat(F), mat(K), mat(K), mat(K), mat(K), mat(K),
-                  vec, vec, vec, vec, vec, vec, vec, hp_spec],
-        out_specs=[vec, vec, mat(F), mat(F), mat(K), mat(K)],
-        out_shape=[jax.ShapeDtypeStruct((Bp,), jnp.float32),
-                   jax.ShapeDtypeStruct((Bp,), jnp.float32),
-                   jax.ShapeDtypeStruct((Bp, F), jnp.float32),
-                   jax.ShapeDtypeStruct((Bp, F), jnp.float32),
-                   jax.ShapeDtypeStruct((Bp, K), jnp.float32),
-                   jax.ShapeDtypeStruct((Bp, K), jnp.float32)],
+        in_specs=[mat(F + 1), mat(F + 2 * K + 1), mat(K), mat(K), mat(K),
+                  vec, vec, hp_spec],
+        out_specs=[mat(F + 1), mat(F + 2 * K + 1)],
+        out_shape=[jax.ShapeDtypeStruct((Bp, F + 1), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, F + 2 * K + 1), jnp.float32)],
         interpret=interpret,
-    )(u, v, w, c, resid, impl, expl, b_i, bh_j, bbar, r,
-      valid.astype(jnp.float32), sR, sN, hp.astype(jnp.float32))
+    )(row, col, rnb, bh_nb, expl, r, valid.astype(jnp.float32),
+      hp.astype(jnp.float32))
     return tuple(o[:B] for o in outs)
 
 

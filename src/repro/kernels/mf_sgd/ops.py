@@ -1,10 +1,13 @@
-"""jit'd wrappers: gather rows → fused kernel step → scatter deltas back.
+"""jit'd wrappers: gather plane rows → fused kernel step → scatter deltas.
 
-The conflict-free batch guarantee (see `data.sparse.conflict_free_schedule`)
-makes the scatter race-free: each valid i/j appears once, so adding the
-per-row *delta* is exactly Eq. (5).  Deltas (not `.set`) also make padding
-slots — which repeat triple 0 with ``valid`` False — harmless no-ops even
-when triple 0 is live in the same batch.
+The packed-parameter layout (`model.PackedParams`) makes the whole step
+**two** gather/scatter pairs: one [B, F+1] row-plane gather + delta
+scatter (U and b together) and one [B, F+2K+1] col-plane pair (V, W, C
+and b̂) — versus the six of the pre-packed layout.  The conflict-free
+batch guarantee (see `data.sparse.conflict_free_schedule`) makes the
+scatter race-free: each valid i/j appears once, so adding the per-row
+*delta* is exactly Eq. (5).  Deltas (not `.set`) also make padding slots
+— which repeat a live triple with ``valid`` False — harmless no-ops.
 
 ``impl="auto"`` resolves to the pure-jnp ref on CPU (where Pallas only has
 the slow interpreter) and the fused Pallas kernel elsewhere, mirroring
@@ -19,7 +22,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.model import Batch, Params
+from repro.core.model import Batch, PackedParams
 from repro.kernels.mf_sgd.kernel import culsh_sgd_step, mf_sgd_step
 from repro.kernels.mf_sgd.ref import culsh_sgd_step_ref, mf_sgd_step_ref
 
@@ -31,12 +34,15 @@ def resolve_impl(impl: str) -> str:
     return "ref" if jax.default_backend() == "cpu" else "pallas"
 
 
-def apply_mf_sgd(p: Params, i, j, r, valid, hp, decay, *,
+def apply_mf_sgd(pp: PackedParams, bt: Batch, hp, decay, *,
                  impl: str = "pallas", tile_b: int = 256,
-                 interpret: bool = True, bce: bool = False) -> Params:
-    """CUSGD++ step applied to Params via a conflict-free batch."""
-    u, v = p.U[i], p.V[j]
-    args = (u, v, r, valid,
+                 interpret: bool = True, bce: bool = False) -> PackedParams:
+    """CUSGD++ step applied to the packed planes via a conflict-free batch
+    (only the U/V columns are touched)."""
+    F = pp.F
+    u = pp.row[bt.i, :F]
+    v = pp.col[bt.j, :F]
+    args = (u, v, bt.r, bt.valid,
             jnp.float32(hp.a_u) * decay, jnp.float32(hp.a_v) * decay,
             jnp.float32(hp.l_u), jnp.float32(hp.l_v))
     if impl == "ref":
@@ -45,39 +51,34 @@ def apply_mf_sgd(p: Params, i, j, r, valid, hp, decay, *,
         u2, v2, _ = mf_sgd_step(*args, tile_b=tile_b, interpret=interpret,
                                 bce=bce)
     return dataclasses.replace(
-        p, U=p.U.at[i].add(u2 - u), V=p.V.at[j].add(v2 - v))
+        pp, row=pp.row.at[bt.i, :F].add(u2 - u),
+        col=pp.col.at[bt.j, :F].add(v2 - v))
 
 
-def apply_culsh_sgd(p: Params, bt: Batch, hp, decay, *,
+def apply_culsh_sgd(pp: PackedParams, bt: Batch, hp, decay, *,
                     impl: str = "pallas", tile_b: int = 256,
-                    interpret: bool = True, bce: bool = False) -> Params:
-    """Fused six-parameter CULSH-MF step applied to Params.
+                    interpret: bool = True, bce: bool = False) -> PackedParams:
+    """Fused six-parameter CULSH-MF step applied to the packed planes.
 
-    XLA-level gathers assemble the row-aligned operands (same split as
-    `candidate_score`: gathers outside, dense tiles inside the kernel).
+    XLA-level gathers assemble the plane tiles (same split as
+    `candidate_score`: gathers outside, dense tiles inside the kernel);
+    the only extra gather is the neighbour-baseline read b̂[J^K[j]],
+    which needs rows of the col plane the batch doesn't own.
     """
-    b_i, bh_j = p.b[bt.i], p.bh[bt.j]
-    u, v, w, c = p.U[bt.i], p.V[bt.j], p.W[bt.j], p.C[bt.j]
-    bbar = p.mu + b_i + bh_j
-    bbar_nb = p.mu + b_i[:, None] + p.bh[bt.nb]
-    resid = (bt.rnb - bbar_nb) * bt.expl
-    nR = jnp.sum(bt.expl, 1)
-    nN = jnp.sum(bt.impl, 1)
-    sR = jnp.where(nR > 0, jax.lax.rsqrt(jnp.maximum(nR, 1.0)), 0.0)
-    sN = jnp.where(nN > 0, jax.lax.rsqrt(jnp.maximum(nN, 1.0)), 0.0)
+    F, K = pp.F, pp.K
+    row = pp.row[bt.i]                      # [B, F+1]
+    col = pp.col[bt.j]                      # [B, F+2K+1]
+    bh_nb = pp.col[bt.nb, F + 2 * K]        # [B, K]
     d = decay
     hpv = jnp.stack([hp.a_b * d, hp.a_bh * d, hp.a_u * d, hp.a_v * d,
                      hp.a_w * d, hp.a_c * d,
                      jnp.float32(hp.l_b), jnp.float32(hp.l_bh),
                      jnp.float32(hp.l_u), jnp.float32(hp.l_v),
-                     jnp.float32(hp.l_w), jnp.float32(hp.l_c)])
+                     jnp.float32(hp.l_w), jnp.float32(hp.l_c), pp.mu])
     step = (culsh_sgd_step_ref if impl == "ref"
             else partial(culsh_sgd_step, tile_b=tile_b, interpret=interpret))
-    b2, bh2, u2, v2, w2, c2 = step(
-        b_i, bh_j, u, v, w, c, resid, bt.impl, bt.expl, bbar, bt.r, bt.valid,
-        sR, sN, hpv, bce=bce)
+    row2, col2 = step(row, col, bt.rnb, bh_nb, bt.expl, bt.r, bt.valid, hpv,
+                      bce=bce)
     return dataclasses.replace(
-        p,
-        b=p.b.at[bt.i].add(b2 - b_i), bh=p.bh.at[bt.j].add(bh2 - bh_j),
-        U=p.U.at[bt.i].add(u2 - u), V=p.V.at[bt.j].add(v2 - v),
-        W=p.W.at[bt.j].add(w2 - w), C=p.C.at[bt.j].add(c2 - c))
+        pp, row=pp.row.at[bt.i].add(row2 - row),
+        col=pp.col.at[bt.j].add(col2 - col))

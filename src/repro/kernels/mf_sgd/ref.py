@@ -6,6 +6,8 @@ On CPU these *are* the fast path: `ops` resolves ``impl="auto"`` to the ref
 import jax
 import jax.numpy as jnp
 
+from repro.core.model import predict_gathered
+
 
 def mf_sgd_step_ref(u, v, r, valid, gamma_u, gamma_v, lam_u, lam_v, *,
                     bce: bool = False):
@@ -18,24 +20,41 @@ def mf_sgd_step_ref(u, v, r, valid, gamma_u, gamma_v, lam_u, lam_v, *,
     return u2, v2, e
 
 
-def culsh_sgd_step_ref(b_i, bh_j, u, v, w, c, resid, impl, expl, bbar, r,
-                       valid, sR, sN, hp, *, bce: bool = False):
-    """Fused six-parameter Eq. (5) step on a conflict-free batch tile.
+def culsh_sgd_step_ref(row, col, rnb, bh_nb, expl, r, valid, hp, *,
+                       bce: bool = False):
+    """Fused six-parameter Eq. (5) step on a conflict-free packed tile.
 
-    ``hp`` packs the 12 decayed hyper scalars
-    ``(γb, γb̂, γu, γv, γw, γc, λb, λb̂, λu, λv, λw, λc)``; all other
-    operands are row-aligned gathers (see `ops.apply_culsh_sgd`).
+    Packed-plane operands (see `model.PackedParams`): ``row [B, F+1]`` =
+    U‖b and ``col [B, F+2K+1]`` = V‖W‖C‖b̂ are row-aligned gathers of the
+    two parameter planes; ``hp`` packs the 12 decayed hyper scalars
+    ``(γb, γb̂, γu, γv, γw, γc, λb, λb̂, λu, λv, λw, λc)`` plus ``μ``.
+    The Eq. (1) forward (including b̄, residuals and the |R|/|N|
+    normalizers) happens *inside* the step — only the neighbour-baseline
+    gather ``bh_nb`` = b̂[J^K[j]] needs the full plane and stays outside.
+    Returns the two updated tiles; `ops.apply_culsh_sgd` turns them into
+    one delta-scatter per plane.
     """
-    gb, gbh, gu, gv, gw, gc, lb, lbh, lu, lv, lw, lc = hp
-    pred = (bbar + sR * jnp.sum(resid * w, axis=-1)
-            + sN * jnp.sum(impl * c, axis=-1) + jnp.sum(u * v, axis=-1))
+    F = row.shape[-1] - 1
+    K = rnb.shape[-1]
+    gb, gbh, gu, gv, gw, gc = (hp[k] for k in range(6))
+    lb, lbh, lu, lv, lw, lc = (hp[k] for k in range(6, 12))
+    mu = hp[12]
+    u, b = row[:, :F], row[:, F]
+    v, w = col[:, :F], col[:, F:F + K]
+    c, bh = col[:, F + K:F + 2 * K], col[:, F + 2 * K]
+    impl = 1.0 - expl
+    pred, aux = predict_gathered(mu, b, bh, u, v, w, c, bh_nb,
+                                 rnb, expl, impl)
+    resid, sR, sN = aux["resid"], aux["sR"], aux["sN"]
     e = (r - (jax.nn.sigmoid(pred) if bce else pred)) * valid
     eb = e[:, None]
     vm = valid[:, None]
-    b2 = b_i + gb * (e - lb * b_i) * valid
-    bh2 = bh_j + gbh * (e - lbh * bh_j) * valid
+    b2 = b + gb * (e - lb * b) * valid
+    bh2 = bh + gbh * (e - lbh * bh) * valid
     u2 = u + gu * (eb * v - lu * u) * vm
     v2 = v + gv * (eb * u - lv * v) * vm
     w2 = w + gw * (sR[:, None] * eb * resid - lw * w) * expl * vm
     c2 = c + gc * (sN[:, None] * eb - lc * c) * impl * vm
-    return b2, bh2, u2, v2, w2, c2
+    row2 = jnp.concatenate([u2, b2[:, None]], axis=1)
+    col2 = jnp.concatenate([v2, w2, c2, bh2[:, None]], axis=1)
+    return row2, col2

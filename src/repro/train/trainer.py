@@ -101,23 +101,6 @@ def build_neighbours(sp: SparseMatrix, cfg: FitConfig, key):
     return JK, time.perf_counter() - t0, S, k_sig
 
 
-def _pad_params(p: model.Params, Mp: int, Np: int) -> model.Params:
-    """Grow params with zero rows/cols up to the shard-divisible sizes."""
-    pad0 = lambda a, n: jnp.concatenate(
-        [a, jnp.zeros((n - a.shape[0],) + a.shape[1:], a.dtype)])
-    return model.Params(U=pad0(p.U, Mp), V=pad0(p.V, Np), b=pad0(p.b, Mp),
-                        bh=pad0(p.bh, Np), W=pad0(p.W, Np),
-                        C=pad0(p.C, Np), mu=p.mu)
-
-
-def _slice_params(p: model.Params, M: int, N: int) -> model.Params:
-    """Drop shard padding (no-op when already unpadded)."""
-    if p.U.shape[0] == M and p.V.shape[0] == N:
-        return p
-    return model.Params(U=p.U[:M], V=p.V[:N], b=p.b[:M], bh=p.bh[:N],
-                        W=p.W[:N], C=p.C[:N], mu=p.mu)
-
-
 def fit(train_coo, test_coo, shape, cfg: FitConfig,
         log: Callable[[str], None] | None = None) -> FitResult:
     key = jax.random.PRNGKey(cfg.seed)
@@ -150,12 +133,14 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
     mesh = make_shard_mesh(shards) if scheduled and shards > 1 else None
 
     # once-per-fit precomputation: tiered conflict-free schedule + the
-    # schedule-ordered training data + eval gather cache (Ω, J^K and the
-    # test set are fixed for the whole offline fit).  Prep is a one-off
-    # cost amortized over epochs — schedule_stats reports both.
+    # schedule-ordered training data (+ dense shard-tier cells) + eval
+    # gather cache (Ω, J^K and the test set are fixed for the whole
+    # offline fit).  Prep is a one-off cost amortized over epochs —
+    # schedule_stats reports both.
     prep_secs = 0.0
     sched_stats = None
     ec = None
+    shd = None
     if scheduled:
         t0 = time.perf_counter()
         sched = conflict_free_schedule(
@@ -164,6 +149,7 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
             tier_shrink=cfg.tier_shrink, min_fill_frac=cfg.min_fill_frac,
             shards=shards, M=sp.M, N=sp.N, seed=cfg.seed)
         sd = model.build_scheduled_data(sp, JK, sched, mf_only=mf_only)
+        shd = model.build_shard_data(sp, JK, sched, mf_only=mf_only)
         if cfg.eval_every:
             ec = model.build_eval_cache(sp, JK, te_r, te_c, mf_only=mf_only)
         jax.block_until_ready(sd.r)
@@ -177,11 +163,6 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
                 f"(cf_frac={sched_stats['cf_frac']:.2f}, "
                 f"fill={sched_stats['fill']:.2f}, prep={prep_secs:.2f}s "
                 f"= {sched_stats['prep_per_epoch']:.3f}s/epoch)")
-        if mesh is not None:
-            # shard_map needs equal param blocks — pad ids to D·block size
-            # (padded rows/cols are touched by no triple; sliced off at end)
-            params = _pad_params(params, sched.block_rows * shards,
-                                 sched.block_cols * shards)
 
     # impl resolution needs the backend, so it happens here, outside jit
     # (mirrors the candidate_score impl="auto" pattern)
@@ -194,40 +175,49 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
     ep0 = jnp.asarray(start_epoch)
     k0 = jax.random.fold_in(k_ep, start_epoch)
     if scheduled:
+        # training state: block-padded id space (shard schedules relay
+        # every id through sched.row_map/col_map) + the two packed planes;
+        # unpacked original-id Params only at the eval/ckpt/result boundary
+        state = model.pack_params(model.remap_params(params, sched))
+        to_public = lambda q: model.unmap_params(model.unpack_params(q),
+                                                 sched)
         epoch_fn = sgd.train_epoch_scheduled.lower(
-            params, sd, sched, k0, ep0, cfg.hp, mf_only=mf_only,
+            state, sd, sched, k0, ep0, cfg.hp, shd=shd, mf_only=mf_only,
             bce=bce, use_kernels=cfg.use_kernels, impl=impl,
             interpret=interpret, mesh=mesh).compile()
-        run = lambda pp, kk, ee: epoch_fn(pp, sd, sched, kk, ee, cfg.hp)
+        run = lambda qq, kk, ee: epoch_fn(qq, sd, sched, kk, ee, cfg.hp,
+                                          shd=shd)
     else:
+        state = params
+        to_public = lambda q: q
         epoch_fn = sgd.train_epoch.lower(
-            params, sp, JK, k0, ep0, cfg.hp, batch=cfg.batch,
+            state, sp, JK, k0, ep0, cfg.hp, batch=cfg.batch,
             mf_only=mf_only, bce=bce).compile()
-        run = lambda pp, kk, ee: epoch_fn(pp, sp, JK, kk, ee, cfg.hp)
+        run = lambda qq, kk, ee: epoch_fn(qq, sp, JK, kk, ee, cfg.hp)
     compile_secs = time.perf_counter() - t0
 
     history = []
     t_train = 0.0
     for ep in range(start_epoch, cfg.epochs):
         t0 = time.perf_counter()
-        params = run(params, jax.random.fold_in(k_ep, ep), jnp.asarray(ep))
-        jax.block_until_ready(params.U)
+        state = run(state, jax.random.fold_in(k_ep, ep), jnp.asarray(ep))
+        jax.block_until_ready(jax.tree.leaves(state)[0])
         t_train += time.perf_counter() - t0
         if cfg.eval_every and (ep + 1) % cfg.eval_every == 0:
+            p_eval = to_public(state)
             if ec is not None:   # per-epoch eval is a cached gather scan
-                r = float(model.rmse_cached(params, ec, te_r, te_c, te_v,
+                r = float(model.rmse_cached(p_eval, ec, te_r, te_c, te_v,
                                             mf_only=mf_only))
             else:
-                r = float(model.rmse(params, sp, JK, te_r, te_c, te_v,
+                r = float(model.rmse(p_eval, sp, JK, te_r, te_c, te_v,
                                      mf_only=mf_only))
             history.append((ep, t_train, r))
             if log:
                 log(f"epoch {ep:3d}  t={t_train:7.2f}s  rmse={r:.4f}")
         if cfg.ckpt_dir and cfg.ckpt_every and (ep + 1) % cfg.ckpt_every == 0:
-            ckpt.save(cfg.ckpt_dir, _slice_params(params, sp.M, sp.N),
-                      step=ep + 1)
+            ckpt.save(cfg.ckpt_dir, to_public(state), step=ep + 1)
 
-    params = _slice_params(params, sp.M, sp.N)
+    params = to_public(state)
     return FitResult(params, JK, history, nb_secs, S, hash_key=k_sig,
                      compile_seconds=compile_secs, prep_seconds=prep_secs,
                      schedule_stats=sched_stats)

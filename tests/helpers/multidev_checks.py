@@ -18,8 +18,9 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 
 def check_sharded_epoch():
-    """Block-aligned shard-map tier (4 host devices) == single-device
-    replay of the same schedule, params and RMSE within 1e-5."""
+    """Block-aligned shard-map tier (4 host devices, nnz-balanced blocks,
+    packed planes, device-sharded ShardData cells) == single-device replay
+    of the same schedule, params and RMSE within 1e-5."""
     from repro.core import model, sgd
     from repro.data import synthetic as syn
     from repro.data.sparse import conflict_free_schedule, from_coo
@@ -35,16 +36,22 @@ def check_sharded_epoch():
                                    batch=64, M=M, N=N, shards=D, seed=0)
     assert sched.shard_starts.size, "shard tier empty"
     sd = model.build_scheduled_data(sp, JK, sched)
+    shd = model.build_shard_data(sp, JK, sched)
+    assert shd is not None
     p0 = model.init_from_data(jax.random.PRNGKey(0), sp, 8, K)
+    pp0 = model.pack_params(model.remap_params(p0, sched))
     hp = sgd.Hyper()
     mesh = make_shard_mesh(D)
     key = jax.random.PRNGKey(1)
     copy = lambda p: jax.tree.map(jnp.copy, p)
-    p1, p2 = copy(p0), copy(p0)
+    pp1, pp2 = copy(pp0), copy(pp0)
     for ep in range(2):
         kk, ee = jax.random.fold_in(key, ep), jnp.asarray(ep)
-        p1 = sgd.train_epoch_scheduled(p1, sd, sched, kk, ee, hp)
-        p2 = sgd.train_epoch_scheduled(p2, sd, sched, kk, ee, hp, mesh=mesh)
+        pp1 = sgd.train_epoch_scheduled(pp1, sd, sched, kk, ee, hp, shd=shd)
+        pp2 = sgd.train_epoch_scheduled(pp2, sd, sched, kk, ee, hp, shd=shd,
+                                        mesh=mesh)
+    p1 = model.unmap_params(model.unpack_params(pp1), sched)
+    p2 = model.unmap_params(model.unpack_params(pp2), sched)
     for f in ("U", "V", "b", "bh", "W", "C"):
         np.testing.assert_allclose(np.asarray(getattr(p1, f)),
                                    np.asarray(getattr(p2, f)),

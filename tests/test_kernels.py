@@ -67,16 +67,14 @@ def test_neighbor_predict_property(B, K, seed):
 
 
 def _culsh_args(B, F, K, rng):
+    """Packed-plane operands: (row [B,F+1], col [B,F+2K+1], rnb, bh_nb,
+    expl, r, valid, hp[13]) — see `mf_sgd.ref.culsh_sgd_step_ref`."""
     a = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32))
     expl = jnp.asarray(rng.integers(0, 2, (B, K)).astype(np.float32))
-    impl = 1.0 - expl
     valid = jnp.asarray(rng.integers(0, 2, B).astype(np.float32))
-    nR, nN = expl.sum(1), impl.sum(1)
-    sR = jnp.where(nR > 0, 1 / jnp.sqrt(jnp.maximum(nR, 1.0)), 0.0)
-    sN = jnp.where(nN > 0, 1 / jnp.sqrt(jnp.maximum(nN, 1.0)), 0.0)
-    hp = jnp.abs(a(12)) * 0.05
-    return (a(B), a(B), a(B, F), a(B, F), a(B, K), a(B, K), a(B, K) * expl,
-            impl, expl, a(B), a(B), valid, sR, sN, hp)
+    hp = jnp.concatenate([jnp.abs(a(12)) * 0.05, a(1) * 0.1])
+    return (a(B, F + 1), a(B, F + 2 * K + 1), a(B, K), a(B, K), expl,
+            a(B), valid, hp)
 
 
 @pytest.mark.parametrize("bce", [False, True])
@@ -94,10 +92,10 @@ def test_culsh_sgd_shapes(B, F, K, tile, bce):
 
 def test_culsh_sgd_invalid_rows_untouched():
     args = _culsh_args(16, 8, 4, np.random.default_rng(0))
-    args = args[:11] + (jnp.zeros((16,), jnp.float32),) + args[12:]
-    got = culsh_sgd_step(*args)
-    for g, w in zip(got, (args[0], args[1], args[2], args[3], args[4], args[5])):
-        np.testing.assert_allclose(np.asarray(g), np.asarray(w))
+    args = args[:6] + (jnp.zeros((16,), jnp.float32),) + args[7:]
+    row2, col2 = culsh_sgd_step(*args)
+    np.testing.assert_allclose(np.asarray(row2), np.asarray(args[0]))
+    np.testing.assert_allclose(np.asarray(col2), np.asarray(args[1]))
 
 
 def test_mf_sgd_invalid_rows_untouched():

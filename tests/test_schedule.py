@@ -15,8 +15,11 @@ RNG = np.random.default_rng(0)
 
 def _batches(sched):
     """Yield (kind, width, ids) for every batch of every tier, decoded
-    through the schedule-order layout."""
+    through the schedule-order layout.  Shard cells live at positions
+    [0, shard_span); tier/leftover starts are relative to the cf region
+    that follows."""
     order = np.asarray(sched.order)
+    span = sched.shard_span
 
     def window(start, width, valid):
         start = int(start)
@@ -35,10 +38,11 @@ def _batches(sched):
                                             sched.tier_valid)):
         for b in range(starts.shape[0]):
             yield ("tier", t, sched.widths[t],
-                   window(starts[b], sched.widths[t], valid[b]))
+                   window(span + starts[b], sched.widths[t], valid[b]))
     for b in range(sched.lo_starts.shape[0]):
         yield ("lo", b, sched.widths[0],
-               window(sched.lo_starts[b], sched.widths[0], sched.lo_valid[b]))
+               window(span + sched.lo_starts[b], sched.widths[0],
+                      sched.lo_valid[b]))
 
 
 def _check_schedule(rows, cols, sched):
@@ -103,13 +107,19 @@ def test_schedule_zipf_dataset(tiny_sparse):
 
 def test_sharded_schedule_block_aligned(tiny_sparse):
     """Shard-tier batches only touch block ((d+s) % D, d) — the disjointness
-    that lets shard_map scan a step's D batches with no collective."""
+    that lets shard_map scan a step's D batches with no collective.  Blocks
+    are cut at the (nnz-balanced) row/col bounds and every id remaps into
+    a contiguous equal-size block-padded range."""
     sp = tiny_sparse
     D = 4
     sched = conflict_free_schedule(np.asarray(sp.rows), np.asarray(sp.cols),
                                    batch=64, M=sp.M, N=sp.N, shards=D, seed=0)
     _check_schedule(sp.rows, sp.cols, sched)
-    assert sched.shards == D and sched.block_rows * D >= sp.M
+    rb_bounds = np.asarray(sched.row_bounds)
+    cb_bounds = np.asarray(sched.col_bounds)
+    assert sched.shards == D and rb_bounds.shape == (D + 1,)
+    assert rb_bounds[-1] == sp.M and cb_bounds[-1] == sp.N
+    assert sched.block_rows == np.diff(rb_bounds).max()
     rows, cols = np.asarray(sp.rows), np.asarray(sp.cols)
     n_shard = 0
     for kind, key, _, ids in _batches(sched):
@@ -117,9 +127,46 @@ def test_sharded_schedule_block_aligned(tiny_sparse):
             continue
         d, s, _ = key
         n_shard += len(ids)
-        assert (rows[ids] // sched.block_rows == (d + s) % D).all()
-        assert (cols[ids] // sched.block_cols == d).all()
+        blk_r = np.searchsorted(rb_bounds, rows[ids], side="right") - 1
+        blk_c = np.searchsorted(cb_bounds, cols[ids], side="right") - 1
+        assert (blk_r == (d + s) % D).all()
+        assert (blk_c == d).all()
     assert n_shard > 0, "shard tier empty on zipf data"
+    # the id maps re-lay each block into [d·block, d·block + extent):
+    # strictly monotone (order-preserving), block-contiguous, injective
+    rm = np.asarray(sched.row_map)
+    assert rm.shape == (sp.M,) and (np.diff(rm) > 0).all()
+    for d in range(D):
+        seg = rm[rb_bounds[d]:rb_bounds[d + 1]]
+        assert seg[0] == d * sched.block_rows
+        assert seg[-1] < (d + 1) * sched.block_rows
+
+
+def test_nnz_balanced_blocks_beat_equal_range(tiny_sparse):
+    """Equal-nnz block bounds on zipf data: still an exact conflict-free
+    cover, and the shard tier schedules more triples at better fill than
+    the legacy equal-id-range cut (whose head blocks hog the round budget
+    and leave tail-block rounds empty)."""
+    sp = tiny_sparse
+    rows, cols = np.asarray(sp.rows), np.asarray(sp.cols)
+    kw = dict(batch=64, M=sp.M, N=sp.N, shards=4, seed=0)
+    bal = conflict_free_schedule(rows, cols, balance_blocks=True, **kw)
+    eq = conflict_free_schedule(rows, cols, balance_blocks=False, **kw)
+    _check_schedule(rows, cols, bal)
+    _check_schedule(rows, cols, eq)
+    s_bal, s_eq = bal.stats()["shard"], eq.stats()["shard"]
+    assert s_bal["fill"] > s_eq["fill"], (s_bal["fill"], s_eq["fill"])
+    # fewer padded rounds = fewer scan steps for the same coverage
+    assert s_bal["rounds"] < s_eq["rounds"], (s_bal["rounds"], s_eq["rounds"])
+    assert s_bal["n"] >= 0.98 * s_eq["n"], (s_bal["n"], s_eq["n"])
+    # balanced cuts strictly shrink the heaviest block's nnz share (full
+    # equality is unreachable: extents are floored at the round width so
+    # head-cell matchings aren't extent-capped)
+    dr = np.bincount(rows, minlength=sp.M)
+    heaviest = lambda sched_: max(
+        dr[a:b].sum() for a, b in zip(np.asarray(sched_.row_bounds)[:-1],
+                                      np.asarray(sched_.row_bounds)[1:]))
+    assert heaviest(bal) < heaviest(eq), (heaviest(bal), heaviest(eq))
 
 
 def test_scheduled_data_matches_assemble(tiny_sparse):
@@ -205,16 +252,66 @@ def test_conflict_free_step_matches_scaled(tiny_sparse):
                                        rtol=1e-6, atol=1e-7)
 
 
+def test_packed_step_bit_identical(tiny_sparse):
+    """The packed-plane steps are *bit-identical* to the unpacked
+    reference steps — on conflict-free batches, on collision-scaled
+    batches, and with the schedule-precomputed collision normalizers."""
+    sp = tiny_sparse
+    hp = sgd.Hyper()
+    d = jnp.float32(0.9)
+    # conflict-free batch
+    JK, idx, valid = _conflict_free_batch(sp, K=4, seed=11)
+    bt = model.assemble(sp, JK, idx, valid)
+    p = model.init_from_data(jax.random.PRNGKey(3), sp, 8, 4)
+    pp = model.pack_params(p)
+    for f in ("U", "V", "b", "bh", "W", "C"):   # pack∘unpack round-trips
+        np.testing.assert_array_equal(
+            np.asarray(getattr(model.unpack_params(pp), f)),
+            np.asarray(getattr(p, f)), err_msg=f"roundtrip:{f}")
+    cases = [
+        (sgd.culsh_step(p, bt, hp, d, conflict_free=True),
+         sgd.culsh_step_packed(pp, bt, hp, d, conflict_free=True), "cf"),
+        (sgd.mf_step(p, bt, hp, d, conflict_free=True),
+         sgd.mf_step_packed(pp, bt, hp, d, conflict_free=True), "mf"),
+    ]
+    # collision-ful batch (repeated rows/cols) — the scaled path
+    rng = np.random.default_rng(5)
+    ridx = jnp.asarray(rng.integers(0, sp.nnz, 96), jnp.int32)
+    btc = model.assemble(sp, JK, ridx, jnp.ones((96,), bool))
+    cases.append((sgd.culsh_step(p, btc, hp, d, conflict_free=False),
+                  sgd.culsh_step_packed(pp, btc, hp, d, conflict_free=False),
+                  "scaled"))
+    # precomputed normalizers (host 1/count, as in EpochSchedule.lo_scale_*)
+    ri, ci = np.asarray(btc.i), np.asarray(btc.j)
+    inv_count = lambda ids: jnp.asarray(
+        (np.float32(1.0)
+         / np.unique(ids, return_counts=True)[1].astype(np.float32)[
+             np.unique(ids, return_inverse=True)[1]]))
+    cases.append((sgd.culsh_step(p, btc, hp, d, conflict_free=False),
+                  sgd.culsh_step_packed(pp, btc, hp, d,
+                                        scales=(inv_count(ri),
+                                                inv_count(ci))),
+                  "precomputed-scales"))
+    for want, got_pp, tag in cases:
+        got = model.unpack_params(got_pp)
+        for f in ("U", "V", "b", "bh", "W", "C"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+                err_msg=f"{tag}:{f}")
+
+
 def test_fused_kernel_matches_culsh_step(tiny_sparse):
     sp = tiny_sparse
     JK, idx, valid = _conflict_free_batch(sp, K=4)
     bt = model.assemble(sp, JK, idx, valid)
     p = model.init_from_data(jax.random.PRNGKey(1), sp, 8, 4)
+    pp = model.pack_params(p)
     hp = sgd.Hyper()
     d = jnp.float32(0.7)
     want = sgd.culsh_step(p, bt, hp, d, conflict_free=True)
     for impl in ("ref", "pallas"):
-        got = apply_culsh_sgd(p, bt, hp, d, impl=impl, interpret=True)
+        got = model.unpack_params(
+            apply_culsh_sgd(pp, bt, hp, d, impl=impl, interpret=True))
         for f in ("b", "bh", "U", "V", "W", "C"):
             np.testing.assert_allclose(
                 np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
@@ -231,16 +328,19 @@ def test_kernels_width_generic(tiny_sparse):
         JK, idx, valid = _conflict_free_batch(sp, K=4, B=B, seed=B)
         bt = model.assemble(sp, JK, idx, valid)
         p = model.init_from_data(jax.random.PRNGKey(B), sp, 8, 4)
+        pp = model.pack_params(p)
         want = sgd.culsh_step(p, bt, hp, d, conflict_free=True)
         for impl in ("ref", "pallas"):
-            got = apply_culsh_sgd(p, bt, hp, d, impl=impl, tile_b=256,
-                                  interpret=True)
+            got = model.unpack_params(
+                apply_culsh_sgd(pp, bt, hp, d, impl=impl, tile_b=256,
+                                interpret=True))
             for f in ("b", "bh", "U", "V", "W", "C"):
                 np.testing.assert_allclose(
                     np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
                     rtol=1e-5, atol=1e-5, err_msg=f"B={B} {impl}:{f}")
-        got_mf = apply_mf_sgd(p, bt.i, bt.j, bt.r, bt.valid, hp, d,
-                              impl="pallas", tile_b=256, interpret=True)
+        got_mf = model.unpack_params(
+            apply_mf_sgd(pp, bt, hp, d, impl="pallas", tile_b=256,
+                         interpret=True))
         want_mf = sgd.mf_step(p, bt, hp, d, conflict_free=True)
         np.testing.assert_allclose(np.asarray(got_mf.U), np.asarray(want_mf.U),
                                    rtol=1e-5, atol=1e-6, err_msg=f"B={B} mf")
@@ -251,12 +351,13 @@ def test_mf_kernel_matches_mf_step(tiny_sparse):
     JK, idx, valid = _conflict_free_batch(sp, K=4, seed=3)
     bt = model.assemble(sp, JK, idx, valid)
     p = model.init_from_data(jax.random.PRNGKey(2), sp, 8, 4)
+    pp = model.pack_params(p)
     hp = sgd.Hyper()
     d = jnp.float32(1.0)
     want = sgd.mf_step(p, bt, hp, d, conflict_free=True)
     for impl in ("ref", "pallas"):
-        got = apply_mf_sgd(p, bt.i, bt.j, bt.r, bt.valid, hp, d,
-                           impl=impl, interpret=True)
+        got = model.unpack_params(
+            apply_mf_sgd(pp, bt, hp, d, impl=impl, interpret=True))
         np.testing.assert_allclose(np.asarray(got.U), np.asarray(want.U),
                                    rtol=1e-5, atol=1e-6, err_msg=impl)
         np.testing.assert_allclose(np.asarray(got.V), np.asarray(want.V),
@@ -274,23 +375,24 @@ def test_scheduled_epoch_learns_and_matches_unscheduled(tiny_sparse):
     sd = model.build_scheduled_data(sp, JK, sched)
     hp = sgd.Hyper()
     p0 = model.init_from_data(jax.random.PRNGKey(0), sp, 8, K)
+    pp0 = model.pack_params(p0)
     copy = lambda p: jax.tree.map(jnp.copy, p)
     key = jax.random.PRNGKey(1)
 
-    def sse(p):
-        pred, _ = model.predict(p, model.assemble(
+    def sse(pp):
+        pred, _ = model.predict(model.unpack_params(pp), model.assemble(
             sp, JK, jnp.arange(sp.nnz, dtype=jnp.int32),
             jnp.ones((sp.nnz,), bool)))
         return float(jnp.mean((sp.vals - pred) ** 2))
 
-    base = sse(p0)
+    base = sse(pp0)
     p1 = p2 = None
     for ep in range(2):
         kk = jax.random.fold_in(key, ep)
         ee = jnp.asarray(ep)
-        p1 = sgd.train_epoch_scheduled(copy(p0) if p1 is None else p1,
+        p1 = sgd.train_epoch_scheduled(copy(pp0) if p1 is None else p1,
                                        sd, sched, kk, ee, hp)
-        p2 = sgd.train_epoch_scheduled(copy(p0) if p2 is None else p2,
+        p2 = sgd.train_epoch_scheduled(copy(pp0) if p2 is None else p2,
                                        sd, sched, kk, ee, hp,
                                        use_kernels=True, impl="ref")
     assert sse(p1) < base

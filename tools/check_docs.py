@@ -1,0 +1,91 @@
+"""Docs gate: execute the docs' code blocks and verify their links.
+
+Two checks over the repo's Markdown docs (README.md, docs/, benchmarks/):
+
+1. every fenced ```python block containing ``>>>`` prompts is run
+   through `doctest` (so the architecture walkthrough can't silently rot
+   as the API moves), and
+2. every relative Markdown link resolves to an existing file, and every
+   in-repo ``#anchor`` matches a heading in the target file (GitHub
+   slug rules, approximated).
+
+Exit non-zero on any failure.  Run as:
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = [ROOT / "README.md", ROOT / "docs" / "ARCHITECTURE.md",
+        ROOT / "benchmarks" / "README.md"]
+
+FENCE = re.compile(r"```python\n(.*?)```", re.S)
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading anchor (approximate: enough for these docs)."""
+    s = re.sub(r"[`*_]", "", heading.strip().lower())
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def run_doctests(doc: pathlib.Path) -> list[str]:
+    fails = []
+    text = doc.read_text()
+    for n, block in enumerate(FENCE.findall(text)):
+        if ">>>" not in block:
+            continue
+        runner = doctest.DocTestRunner(verbose=False,
+                                       optionflags=doctest.ELLIPSIS)
+        test = doctest.DocTestParser().get_doctest(
+            block, {}, f"{doc.name}[block {n}]", str(doc), 0)
+        out = []
+        runner.run(test, out=out.append)
+        if runner.failures:
+            fails.append(f"{doc.name} python block {n}: "
+                         f"{runner.failures} doctest failure(s)\n"
+                         + "".join(out))
+    return fails
+
+
+def check_links(doc: pathlib.Path) -> list[str]:
+    fails = []
+    text = doc.read_text()
+    for target in LINK.findall(text):
+        if re.match(r"^[a-z]+://|^mailto:", target):
+            continue                      # external — not checked offline
+        path_part, _, anchor = target.partition("#")
+        dest = (doc.parent / path_part).resolve() if path_part else doc
+        if path_part and not dest.exists():
+            fails.append(f"{doc.name}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            slugs = {slugify(h) for h in HEADING.findall(dest.read_text())}
+            if anchor.lower() not in slugs:
+                fails.append(f"{doc.name}: broken anchor -> {target}")
+    return fails
+
+
+def main() -> int:
+    fails = []
+    for doc in DOCS:
+        if not doc.exists():
+            fails.append(f"missing doc: {doc.relative_to(ROOT)}")
+            continue
+        fails += run_doctests(doc)
+        fails += check_links(doc)
+    for f in fails:
+        print(f"DOCS FAIL: {f}", file=sys.stderr)
+    if not fails:
+        print(f"docs ok: {len(DOCS)} files, doctests + links clean")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
