@@ -91,6 +91,52 @@ def unpack_params(pp: PackedParams) -> Params:
                   C=pp.col[:, F + K:F + 2 * K], mu=pp.mu)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ServePlanes:
+    """Packed *serving* layout: the scoring-relevant parameters as two
+    planes, built once per `RecsysService` (the serving analogue of
+    `PackedParams`; W/C/μ-neighbour terms never enter the serving score,
+    so the col plane is just ``[N, F+1]``).
+
+    * ``row[:, :F]`` = U,  ``row[:, F]`` = b   — one gather per user
+      fetches factors *and* bias;
+    * ``col[:, :F]`` = V,  ``col[:, F]`` = b̂  — one gather (or one
+      in-kernel DMA) per candidate fetches factors *and* item bias.
+
+    `kernels/candidate_score` consumes these directly: the col plane is
+    the HBM-resident operand whose rows are gathered *inside* the kernel
+    by candidate id, so no ``[B, C, F]`` cube is ever materialized.
+    """
+
+    row: jax.Array  # [M, F+1] float32 — U ‖ b
+    col: jax.Array  # [N, F+1] float32 — V ‖ b̂
+    mu: jax.Array   # []
+    F: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_items(self) -> int:
+        return self.col.shape[0]
+
+
+def pack_serve_planes(p: Params) -> ServePlanes:
+    """Params → the two serving planes (one concatenate per side)."""
+    return ServePlanes(
+        row=jnp.concatenate([p.U, p.b[:, None]], axis=1),
+        col=jnp.concatenate([p.V, p.bh[:, None]], axis=1),
+        mu=p.mu, F=int(p.U.shape[1]))
+
+
+def unpack_serve_planes(sp: ServePlanes) -> Params:
+    """Inverse of `pack_serve_planes` — back to the public layout, with
+    zero-width W/C planes (the serving score never uses them)."""
+    F = sp.F
+    N = sp.col.shape[0]
+    z = jnp.zeros((N, 0), jnp.float32)
+    return Params(U=sp.row[:, :F], V=sp.col[:, :F], b=sp.row[:, F],
+                  bh=sp.col[:, F], W=z, C=z, mu=sp.mu)
+
+
 def remap_params(p: Params, sched) -> Params:
     """Re-lay params from original ids into the schedule's block-padded id
     space (`EpochSchedule.row_map`/``col_map``) — required before training

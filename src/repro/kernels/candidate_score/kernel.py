@@ -1,20 +1,25 @@
-"""Pallas TPU kernel: fused candidate scoring + top-N (serving hot path).
+"""Pallas TPU kernel: in-kernel candidate gather + score + top-N.
 
-For a tile of users, one VMEM pass computes the Eq. (1) baseline+latent
-serving score against each user's C retrieved candidates
+Serving hot path.  Candidate *ids* enter the kernel (scalar-prefetched
+into SMEM); the packed serve plane ``[N, F+1] = V‖b̂`` stays in HBM
+(`pltpu.ANY`) and each user's C candidate rows are DMA'd into a VMEM
+scratch tile on demand — the ``[B, C, F]`` candidate-factor cube that the
+PR 1 scorer materialized via an XLA gather (25–38 MB per 256-user flush
+at C=512–768, F=48) never exists in HBM.  The gather is double-buffered
+across users: while user ``b``'s scores are computed, user ``b+1``'s rows
+are already in flight (the embedding-gather analogue of the guide's
+double-buffering pattern).
 
-    s[b, c] = (μ + b_i[b]) + b̂[b, c] + u[b]·v[b, c]
+Per user the score is Eq. (1)'s serving part
 
-masks the SENTINEL padding, and selects the per-user top-N *inside the
-kernel* — the [TB, C] score matrix never round-trips to HBM, only the
-[TB, topn] result does.  The contraction u·v over candidates is a batched
-[1, F] × [F, C] matvec — MXU-shaped, like `simlsh_encode`.
+    s[c] = (μ + b_i) + b̂[cand[c]] + u · v[cand[c]]
 
-Top-N is a static-depth iterative argmax (select max, knock it out with
--BIG, repeat).  Ties resolve to the lowest candidate slot via a min-over-
-equal-scores reduction — the same first-index rule `jax.lax.top_k` uses,
-which keeps the ref path bit-comparable.  (`topn` is 10-ish; topn·C
-compares per user are noise next to the F·C MACs.)
+with the μ + b_i term pre-folded into the user row's bias column by
+`ops.score_candidates` (one row-plane gather outside the kernel — [B, F+1]
+is micro-batch-sized, not candidate-sized).  Masked (SENTINEL-padded)
+slots score NEG; top-N is the same static-depth iterative argmax as the
+PR 1 kernel (first-index tie rule, matching `jax.lax.top_k`), computed on
+the [1, C] row while it is still VMEM-resident.
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 # python floats (not jnp scalars): they must enter the kernel as literals,
 # pallas_call rejects captured traced constants
@@ -31,63 +37,100 @@ _NEG2 = -3.4e38  # knock-out value, strictly below NEG so already-selected
                  # (incl. masked) slots never repeat
 
 
-def _score_kernel(u_ref, bu_ref, vc_ref, bc_ref, mask_ref,
-                  score_out, idx_out, *, topn: int):
-    u = u_ref[...]                     # [TB, F]
-    bu = bu_ref[...]                   # [TB]
-    vc = vc_ref[...]                   # [TB, C, F]
-    bc = bc_ref[...]                   # [TB, C]
-    mask = mask_ref[...]               # [TB, C]  (1.0 valid)
+def _gather_score_kernel(cand_ref, urow_ref, mask_ref, plane_ref,
+                         score_out, idx_out, rows, sem, *,
+                         topn: int, tile_b: int):
+    """cand_ref [Bp, C] int32 in SMEM (scalar prefetch); urow_ref
+    [tile_b, F+1] VMEM; mask_ref [tile_b, C] VMEM; plane_ref [N, F+1] in
+    ANY/HBM; rows [2, C, F+1] VMEM scratch (double buffer); sem [2] DMA."""
+    C = mask_ref.shape[1]
+    F = plane_ref.shape[1] - 1
+    base = pl.program_id(0) * tile_b
 
-    s = jnp.einsum("bf,bcf->bc", u, vc,
-                   preferred_element_type=jnp.float32)
-    s = s + bc + bu[:, None]
-    s = jnp.where(mask > 0, s, NEG)
+    def row_dma(slot, b, c):
+        # one serve-plane row, HBM → the slot's scratch tile
+        return pltpu.make_async_copy(plane_ref.at[cand_ref[base + b, c]],
+                                     rows.at[slot, c], sem.at[slot])
 
-    TB, C = s.shape
-    col = jax.lax.broadcasted_iota(jnp.int32, (TB, C), 1)
-    big = jnp.int32(C)
-    for t in range(topn):              # static unroll
-        m = jnp.max(s, axis=1)                                  # [TB]
-        at = jnp.min(jnp.where(s == m[:, None], col, big), axis=1)
-        score_out[:, t] = m
-        idx_out[:, t] = at
-        s = jnp.where(col == at[:, None], _NEG2, s)
+    def start_user(slot, b):
+        jax.lax.fori_loop(
+            0, C, lambda c, _: (row_dma(slot, b, c).start(), 0)[1], 0)
+
+    def wait_user(slot, b):
+        # waits are per-copy on the slot's shared semaphore
+        jax.lax.fori_loop(
+            0, C, lambda c, _: (row_dma(slot, b, c).wait(), 0)[1], 0)
+
+    start_user(0, 0)
+
+    def user_body(b, _):
+        slot = jax.lax.rem(b, 2)
+
+        @pl.when(b + 1 < tile_b)
+        def _():  # prefetch the next user's rows into the other buffer
+            start_user(1 - slot, b + 1)
+
+        wait_user(slot, b)
+        v = rows[slot, :, :F]                                   # [C, F]
+        bc = rows[slot, :, F]                                   # [C]
+        u = urow_ref[b, :F]                                     # [F]
+        bu = urow_ref[b, F]                                     # [] = μ + b_i
+        s = jnp.dot(v, u, preferred_element_type=jnp.float32) + bc + bu
+        s = jnp.where(mask_ref[b, :] > 0, s, NEG)[None, :]      # [1, C]
+
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+        big = jnp.int32(C)
+        for t in range(topn):          # static unroll, same as PR 1 kernel
+            m = jnp.max(s, axis=1)
+            at = jnp.min(jnp.where(s == m[:, None], col, big), axis=1)
+            score_out[b, t] = m[0]
+            idx_out[b, t] = at[0]
+            s = jnp.where(col == at[:, None], _NEG2, s)
+        return 0
+
+    jax.lax.fori_loop(0, tile_b, user_body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("topn", "tile_b", "interpret"))
-def candidate_score_topn(u, bu, vc, bc, mask, *, topn: int,
+@functools.partial(jax.jit,
+                   static_argnames=("topn", "tile_b", "interpret"))
+def candidate_score_topn(urow, plane, cand, mask, *, topn: int,
                          tile_b: int = 8, interpret: bool = True):
-    """u [B,F]; bu [B]; vc [B,C,F]; bc,mask [B,C] →
-    (scores [B,topn] f32, idx [B,topn] int32 slots into C).
+    """urow [B, F+1] (U‖(μ+b) rows); plane [N, F+1] (V‖b̂); cand [B, C]
+    int32 ids pre-clipped to [0, N); mask [B, C] f32 (1.0 valid) →
+    (scores [B, topn] f32, idx [B, topn] int32 slots into C).
 
     Masked slots (and padded rows) surface as NEG scores in candidate-slot
     order, exactly like the ref's `top_k` over the masked matrix — callers
     translate idx through their candidate id table and mask on score > NEG.
     """
-    assert vc.shape[1] >= topn, "need at least topn candidate slots"
-    B, C, F = vc.shape
+    B, C = cand.shape
+    assert C >= topn, "need at least topn candidate slots"
+    Fp1 = plane.shape[1]
     pad = (-B) % tile_b
     if pad:
-        u = jnp.pad(u, ((0, pad), (0, 0)))
-        bu = jnp.pad(bu, (0, pad))
-        vc = jnp.pad(vc, ((0, pad), (0, 0), (0, 0)))
-        bc = jnp.pad(bc, ((0, pad), (0, 0)))
+        urow = jnp.pad(urow, ((0, pad), (0, 0)))
+        cand = jnp.pad(cand, ((0, pad), (0, 0)))
         mask = jnp.pad(mask, ((0, pad), (0, 0)))
-    Bp = u.shape[0]
+    Bp = urow.shape[0]
 
-    mat = pl.BlockSpec((tile_b, F), lambda i: (i, 0))
-    vec = pl.BlockSpec((tile_b,), lambda i: (i,))
-    cmat = pl.BlockSpec((tile_b, C), lambda i: (i, 0))
-    cube = pl.BlockSpec((tile_b, C, F), lambda i: (i, 0, 0))
-    tmat = pl.BlockSpec((tile_b, topn), lambda i: (i, 0))
-    scores, idx = pl.pallas_call(
-        functools.partial(_score_kernel, topn=topn),
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                     # cand ids → SMEM
         grid=(Bp // tile_b,),
-        in_specs=[mat, vec, cube, cmat, cmat],
-        out_specs=[tmat, tmat],
+        in_specs=[
+            pl.BlockSpec((tile_b, Fp1), lambda i, *_: (i, 0)),
+            pl.BlockSpec((tile_b, C), lambda i, *_: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # plane stays in HBM
+        ],
+        out_specs=[pl.BlockSpec((tile_b, topn), lambda i, *_: (i, 0)),
+                   pl.BlockSpec((tile_b, topn), lambda i, *_: (i, 0))],
+        scratch_shapes=[pltpu.VMEM((2, C, Fp1), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    scores, idx = pl.pallas_call(
+        functools.partial(_gather_score_kernel, topn=topn, tile_b=tile_b),
+        grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((Bp, topn), jnp.float32),
                    jax.ShapeDtypeStruct((Bp, topn), jnp.int32)],
         interpret=interpret,
-    )(u, bu, vc, bc, mask)
+    )(cand, urow, mask, plane)
     return scores[:B], idx[:B]

@@ -7,14 +7,15 @@ scoring through the fused Pallas kernel (`service`).
 """
 from repro.serve.index import (LSHIndex, build_index, insert, lookup_items,
                                lookup_signatures, needs_rebuild, rebuild)
-from repro.serve.retrieve import (dedup_candidates, retrieve_for_items,
-                                  retrieve_for_users, seed_items)
+from repro.serve.retrieve import (compact_pool, dedup_candidates,
+                                  retrieve_for_items, retrieve_for_users,
+                                  seed_items)
 from repro.serve.service import (RecsysService, ServeConfig, full_topn,
-                                 popular_shortlist)
+                                 popular_shortlist, recommend_candidates)
 
 __all__ = [
     "LSHIndex", "build_index", "insert", "lookup_items", "lookup_signatures",
-    "needs_rebuild", "rebuild", "dedup_candidates", "retrieve_for_items",
-    "retrieve_for_users", "seed_items", "RecsysService", "ServeConfig",
-    "full_topn", "popular_shortlist",
+    "needs_rebuild", "rebuild", "compact_pool", "dedup_candidates",
+    "retrieve_for_items", "retrieve_for_users", "seed_items", "RecsysService",
+    "ServeConfig", "full_topn", "popular_shortlist", "recommend_candidates",
 ]

@@ -30,6 +30,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.topk import SENTINEL
 
@@ -58,9 +59,21 @@ class LSHIndex:
         return self.sorted_sigs.shape[0]
 
     @property
+    def tail_fill(self) -> int:
+        """Host-side tail occupancy.  `build_index`/`insert`/`rebuild`
+        maintain a plain-int mirror of ``tail_len`` outside the pytree
+        (static fields would retrace every jitted consumer on each
+        insert), so the ingestion-plane checks (`needs_rebuild`,
+        `n_items`) don't force a device sync per call.  Instances that
+        crossed a jit boundary lose the mirror and fall back to one
+        sync."""
+        t = getattr(self, "_tail_host", None)
+        return int(self.tail_len) if t is None else t
+
+    @property
     def n_items(self) -> int:
         """Total items the index can answer for (base + current tail)."""
-        return self.n_base + int(self.tail_len)
+        return self.n_base + self.tail_fill
 
 
 @partial(jax.jit, static_argnames=("tail_cap",))
@@ -93,7 +106,15 @@ def build_index(sigs: jax.Array, *, tail_cap: int = 1024) -> LSHIndex:
     factor matrix V, so lookups compose directly with scoring.
     """
     assert sigs.dtype == jnp.int32, f"signatures must be int32, got {sigs.dtype}"
-    return _build(sigs, tail_cap=tail_cap)
+    # retrieve.dedup_candidates runs ids through an invertible
+    # multiplicative hash mod 2³⁰ — ids at or above 2³⁰ would silently
+    # alias in the dedup, so refuse them at build time
+    assert sigs.shape[1] <= 1 << 30, (
+        f"item ids must stay below 2^30 (the dedup hash mask); "
+        f"got N={sigs.shape[1]}")
+    idx = _build(sigs, tail_cap=tail_cap)
+    object.__setattr__(idx, "_tail_host", 0)
+    return idx
 
 
 def insert(index: LSHIndex, new_sigs: jax.Array, new_ids: jax.Array) -> LSHIndex:
@@ -105,21 +126,30 @@ def insert(index: LSHIndex, new_sigs: jax.Array, new_ids: jax.Array) -> LSHIndex
     the full signature set (see `needs_rebuild`).
     """
     n = int(new_ids.shape[0])
-    tl = int(index.tail_len)
+    tl = index.tail_fill
     if tl + n > index.tail_cap:
         raise ValueError(
             f"tail overflow ({tl}+{n} > {index.tail_cap}): rebuild the index")
+    # the 2^30 id contract (dedup hash mask): checked here for host
+    # arrays; device arrays skip it rather than force an ingestion-plane
+    # sync — their callers assert the bound host-side instead
+    # (`build_index`/`rebuild` on N; `ingest_online_update` on state.N)
+    if n and isinstance(new_ids, (np.ndarray, list, tuple)):
+        assert int(np.max(new_ids)) < 1 << 30, \
+            "item ids must stay below 2^30 (the dedup hash mask)"
     tail_sigs = jax.lax.dynamic_update_slice(
         index.tail_sigs, jnp.asarray(new_sigs, jnp.int32), (0, tl))
     tail_ids = jax.lax.dynamic_update_slice(
         index.tail_ids, jnp.asarray(new_ids, jnp.int32), (tl,))
-    return dataclasses.replace(
+    out = dataclasses.replace(
         index, tail_sigs=tail_sigs, tail_ids=tail_ids,
         tail_len=jnp.asarray(tl + n, jnp.int32))
+    object.__setattr__(out, "_tail_host", tl + n)
+    return out
 
 
 def needs_rebuild(index: LSHIndex, incoming: int = 0) -> bool:
-    return int(index.tail_len) + incoming > index.tail_cap
+    return index.tail_fill + incoming > index.tail_cap
 
 
 def rebuild(index: LSHIndex, sigs: jax.Array) -> LSHIndex:
@@ -198,14 +228,18 @@ def _tail_matches(index: LSHIndex, tsig: jax.Array, qsig: jax.Array, *,
     return jnp.where(key < T, ids, SENTINEL)
 
 
-@partial(jax.jit, static_argnames=("cap", "include_tail"))
+@partial(jax.jit, static_argnames=("cap", "include_tail", "assume_base"))
 def lookup_items(index: LSHIndex, item_ids: jax.Array, *, cap: int,
-                 include_tail: bool = True) -> jax.Array:
+                 include_tail: bool = True,
+                 assume_base: bool = False) -> jax.Array:
     """Bucket-mates of items already in the index.  item_ids [B] →
     cand [B, q·cap (+ q·cap tail)] int32, SENTINEL-padded (includes the item
     itself).  ``include_tail=False`` skips the tail scan — callers that batch
     many queries per user (see `retrieve.retrieve_for_users`) scan the tail
-    once per user instead.
+    once per user instead.  ``assume_base=True`` additionally promises every
+    valid query id lives in the sorted core (true whenever the tail is
+    empty, `index.tail_fill == 0`), which skips the signature-probe
+    fallback below — per-query work drops to the O(1) slot lookup.
 
     For base items the bucket is addressed by the precomputed slot (no
     binary search); the window is centred on the item's own slot so huge
@@ -230,24 +264,29 @@ def lookup_items(index: LSHIndex, item_ids: jax.Array, *, cap: int,
                               index.bucket_lo, index.bucket_hi,
                               index.slot_of)                      # [q, B, cap]
 
-    qsigs = _sig_of_items(index, item_ids)                        # [q, B]
+    if not assume_base:
+        qsigs = _sig_of_items(index, item_ids)                    # [q, B]
 
-    # tail-resident query items have no slot — find their base bucket by
-    # binary search on the signature instead
-    def one_band_sig(ssig, sids, qsig):
-        lo = jnp.searchsorted(ssig, qsig).astype(jnp.int32)
-        pos = lo[:, None] + jnp.arange(cap, dtype=jnp.int32)      # [B, cap]
-        ok = pos < ssig.shape[0]
-        pos = jnp.clip(pos, 0, ssig.shape[0] - 1)
-        ok &= ssig[pos] == qsig[:, None]
-        return jnp.where(ok, sids[pos], SENTINEL)
+        # tail-resident query items have no slot — find their base bucket
+        # by binary search on the signature instead
+        def one_band_sig(ssig, sids, qsig):
+            lo = jnp.searchsorted(ssig, qsig).astype(jnp.int32)
+            pos = lo[:, None] + jnp.arange(cap, dtype=jnp.int32)  # [B, cap]
+            ok = pos < ssig.shape[0]
+            pos = jnp.clip(pos, 0, ssig.shape[0] - 1)
+            ok &= ssig[pos] == qsig[:, None]
+            return jnp.where(ok, sids[pos], SENTINEL)
 
-    by_sig = jax.vmap(one_band_sig)(index.sorted_sigs, index.sorted_ids,
-                                    qsigs)                        # [q, B, cap]
-    core = jnp.where(in_base[None, :, None], core, by_sig)
+        by_sig = jax.vmap(one_band_sig)(index.sorted_sigs, index.sorted_ids,
+                                        qsigs)                    # [q, B, cap]
+        core = jnp.where(in_base[None, :, None], core, by_sig)
     core = jnp.transpose(core, (1, 0, 2)).reshape(B, -1)
     if not include_tail:
         return core
+
+    if assume_base:                     # tail scan still requested — the
+        qsigs = _sig_of_items(index, item_ids)   # promise only covers the
+                                                 # query ids, not the tail
 
     # tail members that share any band signature with the query item
     def one_band_tail(tsig, qsig):

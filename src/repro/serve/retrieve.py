@@ -15,8 +15,15 @@ For a batch of users the candidate set is the union of
 
 Everything is fixed-shape: the union is deduplicated into a [B, C] int32
 tensor, SENTINEL-padded, ready for the `candidate_score` kernel.  Dedup is
-sort → neighbour-compare → sort (compaction); `lax.top_k` is deliberately
-avoided — it is several times slower than a second sort at these shapes.
+a **single** sort: ids are pushed through an invertible multiplicative
+hash first (exclusion folded in as SENTINEL), the hashed keys are sorted
+once — equal ids have equal hashes, so duplicates are still adjacent —
+and the surviving uniques are left-compacted by a cumsum + binary-search
+gather (O(C·log L) vs the O(L log L) second sort PR 1 used).  `lax.top_k` is
+deliberately avoided — it is several times slower than sort at these
+shapes — and the mostly-SENTINEL bucket-mate runs are pre-folded
+(`_fold_prefix_runs`; generic `compact_pool` as an optional knob) so the
+one sort runs at a fraction of the raw union width.
 """
 from __future__ import annotations
 
@@ -56,6 +63,67 @@ def seed_items(sp: SparseMatrix, user_ids: jax.Array, *, n_seeds: int,
     return jnp.where(jnp.isfinite(top), seeds, SENTINEL)
 
 
+def _compact_left(keys: jax.Array, width: int) -> jax.Array:
+    """Left-compact each row's non-SENTINEL entries into ``width`` slots,
+    preserving order: output slot k gathers the k-th survivor, found by
+    binary-searching the survivor-count cumsum (O(width·log L) per row —
+    measured ~4 ms at [256, 1552] on CPU where the scatter formulation
+    costs 35 ms and a compacting re-sort 10–14 ms).  Entries past
+    ``width`` survivors are dropped (callers size ``width`` above the
+    typical survivor count)."""
+    L = keys.shape[1]
+    pos = jnp.cumsum(keys != SENTINEL, axis=1, dtype=jnp.int32)    # [B, L]
+    k = jnp.arange(1, width + 1, dtype=jnp.int32)
+    src = jax.vmap(lambda p: jnp.searchsorted(p, k, side="left"))(pos)
+    out = jnp.take_along_axis(keys, jnp.minimum(src, L - 1), axis=1)
+    return jnp.where(k[None, :] <= pos[:, -1:], out, SENTINEL)
+
+
+def _fold_prefix_runs(runs: jax.Array) -> jax.Array:
+    """[B, R, cap] of *prefix-compacted* runs (valid entries contiguous
+    from slot 0 — the `lookup_items` output invariant: a bucket window is
+    `ok = pos < hi` over an ascending ``pos``) → [B, R/2, 3·cap/2]: each
+    pair of runs merges into one ``1.5·cap``-wide run, left run's prefix
+    first.  One elementwise index computation + one `take_along_axis` —
+    ~1 ms where a generic compaction costs 9–10 ms — because the prefix
+    invariant makes the k-th survivor's position *computable* instead of
+    searchable.  A pair with more than ``1.5·cap`` combined survivors
+    drops the overflow; the 1.5× output width is the measured sweet spot
+    (at cap=8, N=100k: same flush time as 1.0×, recall@10 0.9125 vs
+    0.8906 — the 1.0× fold evicted true neighbours from dense band
+    pairs; no-fold recall is 0.9176 at +28% flush time).  Odd run counts
+    pass the last run through, padded to the fold width.
+    """
+    B, R, cap = runs.shape
+    w = 3 * cap // 2
+    pairs = runs[:, :R - R % 2, :].reshape(B, -1, 2 * cap)
+    c0 = jnp.sum(pairs[..., :cap] != SENTINEL, axis=-1,
+                 keepdims=True).astype(jnp.int32)       # left-run survivors
+    j = jnp.arange(w, dtype=jnp.int32)
+    right = jnp.minimum(cap + j - c0, 2 * cap - 1)      # keep src in bounds
+    out = jnp.take_along_axis(pairs, jnp.where(j < c0, j, right), axis=-1)
+    out = jnp.where((j < c0) | (cap + j - c0 < 2 * cap), out, SENTINEL)
+    if R % 2:
+        odd = jnp.pad(runs[:, R - 1:, :], ((0, 0), (0, 0), (0, w - cap)),
+                      constant_values=SENTINEL)
+        out = jnp.concatenate([out, odd], axis=1)
+    return out
+
+
+@partial(jax.jit, static_argnames=("width",))
+def compact_pool(pool: jax.Array, *, width: int) -> jax.Array:
+    """[B, L] SENTINEL-strewn id pool → [B, width], valid ids
+    left-compacted in pool order.  The retrieval pools are mostly
+    SENTINEL (bucket windows shorter than ``cap``, users with fewer than
+    ``n_seeds`` seeds leave whole per-seed runs empty), so compacting
+    them first lets `dedup_candidates` sort a fraction of the raw union
+    width.  Rows with more than ``width`` valid entries drop the
+    overflow in pool order — a biased truncation, so callers keep
+    ``width`` comfortably above the typical valid count (the unbiased
+    hashed truncation still happens in `dedup_candidates`)."""
+    return _compact_left(pool, width)
+
+
 @partial(jax.jit, static_argnames=("C",))
 def dedup_candidates(cands: jax.Array, *, C: int,
                      exclude_sorted: jax.Array | None = None) -> jax.Array:
@@ -67,47 +135,75 @@ def dedup_candidates(cands: jax.Array, *, C: int,
     id range is systematically evicted (ascending-id truncation would always
     drop the newest — highest-id — items first).  Callers size C above the
     typical unique count, so truncation is the overflow case, not the norm.
+
+    One sort total (PR 1 used two): the sort key is the invertible
+    multiplicative hash mod 2³⁰ (odd multiplier) with the exclude mask
+    folded in as SENTINEL, so a single int32 sort simultaneously (a)
+    groups duplicates adjacently — the hash is injective on [0, 2³⁰), so
+    equal hashes ⇔ equal ids — (b) fixes the unbiased truncation order,
+    and (c) pushes padding/excluded slots last.  The surviving first
+    occurrences are then left-compacted by the cumsum + binary-search
+    gather of `_compact_left` and recovered exactly through the hash's
+    modular inverse.
     """
     B, L = cands.shape
+    valid = cands != SENTINEL
     if exclude_sorted is not None:
         p = jnp.clip(jnp.searchsorted(exclude_sorted, cands), 0,
                      exclude_sorted.shape[0] - 1)
-        cands = jnp.where(exclude_sorted[p] == cands, SENTINEL, cands)
-    c = jnp.sort(cands, axis=1)
-    prev = jnp.concatenate([jnp.full((B, 1), -1, c.dtype), c[:, :-1]], axis=1)
-    uniq = (c != prev) & (c != SENTINEL)
-    # compact uniques to the left in *hashed*-id order: h is an invertible
-    # multiplicative hash mod 2³⁰ (odd multiplier), so a plain int32 sort of
-    # h — far cheaper than argsort/pair-sort on CPU and TPU — gives an
-    # unbiased truncation order, padding (SENTINEL > 2³⁰) still sorts last,
-    # and the ids are recovered exactly by the modular inverse.
-    h = jnp.where(uniq, (c * jnp.int32(-1640531535)) & _MASK30, SENTINEL)
-    h = jnp.sort(h, axis=1)[:, :min(C, L)]
-    out = jnp.where(h == SENTINEL, SENTINEL,
-                    (h * jnp.int32(244002641)) & _MASK30)
-    if C > L:
-        out = jnp.pad(out, ((0, 0), (0, C - L)), constant_values=SENTINEL)
-    return out
+        valid &= exclude_sorted[p] != cands
+    h = jnp.where(valid, (cands * jnp.int32(-1640531535)) & _MASK30, SENTINEL)
+    h = jnp.sort(h, axis=1)                        # the single sort
+    prev = jnp.concatenate([jnp.full((B, 1), -1, h.dtype), h[:, :-1]], axis=1)
+    h = jnp.where(h != prev, h, SENTINEL)          # duplicate runs → padding
+    h = _compact_left(h, C)
+    return jnp.where(h == SENTINEL, SENTINEL,
+                     (h * jnp.int32(244002641)) & _MASK30)
 
 
-@partial(jax.jit, static_argnames=("n_seeds", "cap", "C", "window"))
+@partial(jax.jit, static_argnames=("n_seeds", "cap", "C", "window",
+                                   "pool_width", "fold_mates", "tail_scan"))
 def retrieve_for_users(index: LSHIndex, sp: SparseMatrix, user_ids: jax.Array,
                        *, n_seeds: int, cap: int, C: int,
                        JK: jax.Array | None = None,
                        popular: jax.Array | None = None,
-                       window: int = 64) -> jax.Array:
-    """user_ids [B] → candidate item ids [B, C] int32, SENTINEL-padded."""
+                       window: int = 64,
+                       pool_width: int = 0,
+                       fold_mates: bool = True,
+                       tail_scan: bool = True) -> jax.Array:
+    """user_ids [B] → candidate item ids [B, C] int32, SENTINEL-padded.
+
+    Pool-width control ahead of the single dedup sort:
+
+    * ``fold_mates`` (default on) halves the bucket-mate pool by folding
+      pairs of per-(seed, band) prefix runs (`_fold_prefix_runs`) — the
+      dominant pool at ~2–3 valid entries per ``cap``-wide run;
+    * ``tail_scan=False`` skips the online-insert tail pool entirely —
+      pass it when the tail is known empty on the host
+      (``index.tail_fill == 0``), where the scan is all-miss work;
+    * ``pool_width > 0`` additionally pre-compacts the concatenated pool
+      to that width (`compact_pool`).  Off by default: on CPU the
+      generic compaction costs about what the narrower sort saves
+      (measured ~9 ms vs ~8 ms at [256, 1552] → 768); the knob exists
+      for accelerators where sort is relatively dearer.
+    """
     B = user_ids.shape[0]
     seeds = seed_items(sp, user_ids, n_seeds=n_seeds, window=window)  # [B, S]
 
+    # an empty (or absent) tail means every seed id lives in the sorted
+    # core — lookup can take the slot-only fast path
+    base_only = (not tail_scan) or index.tail_cap == 0
     mates = lookup_items(index, seeds.reshape(-1), cap=cap,
-                         include_tail=False)
+                         include_tail=False, assume_base=base_only)
+    mates = mates.reshape(B, -1, cap)             # [B, S·q, cap] prefix runs
+    if fold_mates:
+        mates = _fold_prefix_runs(mates)
     pools = [mates.reshape(B, -1), seeds]
     if JK is not None:
         safe = jnp.clip(seeds, 0, JK.shape[0] - 1)
         nb = jnp.where((seeds != SENTINEL)[:, :, None], JK[safe], SENTINEL)
         pools.append(nb.reshape(B, -1))
-    if index.tail_cap:
+    if index.tail_cap and tail_scan:
         # one tail scan per *user*: tail items colliding with any seed/band
         qsigs = _sig_of_items(index, seeds)                   # [q, B, S]
         hit = jnp.any(qsigs[..., None] == index.tail_sigs[:, None, None, :],
@@ -115,6 +211,8 @@ def retrieve_for_users(index: LSHIndex, sp: SparseMatrix, user_ids: jax.Array,
         pools.append(jnp.where(hit, index.tail_ids[None, :], SENTINEL))
 
     pool = jnp.concatenate(pools, axis=1)
+    if 0 < pool_width < pool.shape[1]:
+        pool = compact_pool(pool, width=pool_width)
     if popular is None:
         return dedup_candidates(pool, C=C)
     # popularity shortlist gets reserved slots at the end of the row

@@ -1,17 +1,29 @@
 """Request-batching serving loop: retrieval → candidate scoring → top-N.
 
-A `RecsysService` owns the trained parameters, the persistent `LSHIndex`,
-and two jitted serving pipelines:
+A `RecsysService` owns the trained parameters (packed once into the
+`model.ServePlanes` scoring layout), the persistent `LSHIndex`, and two
+serving pipelines:
 
-  * ``candidate`` — `retrieve.retrieve_for_users` (ANN candidates) feeding
-    the fused `kernels/candidate_score` Pallas kernel: O(C) work per user.
-  * ``full``      — exact `μ + b_i + b̂ + U V^T` top-N: O(N) work per user,
-    kept as the exactness baseline (and for recall measurement).
+  * ``candidate`` — one fused, jitted program (`recommend_candidates`):
+    `retrieve.retrieve_for_users` (ANN candidates, single-sort dedup)
+    feeding `kernels/candidate_score` with in-kernel plane gather — O(C)
+    work per user, no host hop between retrieval and scoring.
+  * ``full``      — exact `μ + b_i + b̂ + U V^T` top-N: O(N) work per
+    user, kept as the exactness baseline (and for recall measurement).
 
-Requests are micro-batched: `submit` accumulates user ids and flushes a
-fixed-shape batch whenever ``micro_batch`` are pending (padding keeps every
-flush the same shape, so the jit cache stays warm after the first call).
-QPS / latency percentiles are tracked per flush.
+Requests are micro-batched: `submit` accumulates user ids (a `deque` —
+PR 1's ``list.pop(0)`` was O(n) per flush) and flushes a fixed-shape
+batch whenever ``micro_batch`` are pending (padding keeps every flush
+the same shape, so the jit cache stays warm after the first call).
+
+Flushes are **dispatch-ahead** (double-buffered): `_flush_one` enqueues
+flush k+1 onto the device before syncing flush k, so the host-side batch
+assembly and result copy-out of one flush overlap the device compute of
+the next.  Latency is measured per flush from dispatch to *result
+readiness* (the sync), so p50/p95 stay honest — an overlapped flush's
+latency includes any time it spent queued behind its predecessor — and
+QPS divides by non-overlapping busy wall-time, never double-counting the
+overlap.
 
 Online ingestion (paper Alg. 4): `ingest_online_update` re-signs the
 accumulator cache from `core.online.online_update` and *inserts* the new
@@ -20,6 +32,7 @@ to a rebuild only when the tail overflows.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from functools import partial
@@ -28,9 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import simlsh
+from repro.core import model, simlsh
 from repro.core.model import Params
-from repro.core.topk import SENTINEL
 from repro.data.sparse import SparseMatrix
 from repro.kernels.candidate_score.ops import score_candidates
 from repro.serve import index as lsh_index
@@ -49,6 +61,12 @@ class ServeConfig:
     n_popular: int = 64       # global popularity shortlist size (0 = off)
     seed_window: int = 64
     use_jk: bool = True       # include seeds' training Top-K lists
+    fold_mates: bool = True   # fold per-(seed, band) bucket runs pairwise
+                              # (halves the dedup sort width; see
+                              # retrieve._fold_prefix_runs)
+    pool_width: int = 0       # generic pre-dedup pool compaction width
+                              # (0 = off — a wash on CPU, see
+                              # retrieve.compact_pool; knob for TPU)
     # kernel knobs
     tile_b: int = 8
     interpret: bool | None = None  # None = auto (interpret only on CPU);
@@ -68,6 +86,9 @@ class ServeConfig:
             return self.interpret
         return jax.default_backend() == "cpu"
 
+    def resolved_pool_width(self) -> int:
+        return self.pool_width
+
 
 @partial(jax.jit, static_argnames=("topn",))
 def full_topn(params: Params, user_ids: jax.Array, *, topn: int):
@@ -75,6 +96,30 @@ def full_topn(params: Params, user_ids: jax.Array, *, topn: int):
     scores = (params.mu + params.b[user_ids][:, None] + params.bh[None, :]
               + params.U[user_ids] @ params.V.T)
     return jax.lax.top_k(scores, topn)
+
+
+@partial(jax.jit,
+         static_argnames=("n_seeds", "cap", "C", "window", "pool_width",
+                          "fold_mates", "tail_scan", "topn", "tile_b",
+                          "interpret", "impl"))
+def recommend_candidates(planes: model.ServePlanes, index, sp, user_ids,
+                         JK, popular, *, n_seeds: int, cap: int, C: int,
+                         window: int, pool_width: int, fold_mates: bool,
+                         tail_scan: bool, topn: int,
+                         tile_b: int, interpret: bool, impl: str):
+    """The whole candidate hot path as ONE jitted program — retrieval and
+    scoring fuse into a single dispatch with no host round-trip between
+    them, and every intermediate (pools, sort keys, the candidate table)
+    is program-local, so XLA reuses those buffers across the
+    retrieval/scoring boundary instead of holding two jit outputs live
+    (the PR 1 layout donated nothing and kept `cand` alive between two
+    dispatches)."""
+    cand = retrieve_for_users(index, sp, user_ids, n_seeds=n_seeds, cap=cap,
+                              C=C, JK=JK, popular=popular, window=window,
+                              pool_width=pool_width, fold_mates=fold_mates,
+                              tail_scan=tail_scan)
+    return score_candidates(planes, user_ids, cand, topn=topn, tile_b=tile_b,
+                            interpret=interpret, impl=impl)
 
 
 def popular_shortlist(params: Params, n: int) -> jax.Array:
@@ -89,17 +134,23 @@ class RecsysService:
                  sp: SparseMatrix, cfg: ServeConfig,
                  JK: jax.Array | None = None):
         self.params = params
+        self.planes = model.pack_serve_planes(params)   # built once
         self.index = index
         self.sp = sp
         self.cfg = cfg
         self.JK = JK if cfg.use_jk else None
         self.popular = (popular_shortlist(params, cfg.n_popular)
                         if cfg.n_popular else None)
-        self._pending: list[np.ndarray] = []
+        self._pending: collections.deque[np.ndarray] = collections.deque()
         self._n_pending = 0
+        # dispatched-but-unsynced flushes: (user_ids, n_real, t0, outputs)
+        self._inflight: collections.deque = collections.deque()
         self._results: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
         self._flush_secs: list[float] = []
         self._users_served = 0
+        self._dispatched = 0
+        self._busy_secs = 0.0
+        self._last_ready = 0.0
 
     # ---- core pipelines (fixed [micro_batch] shapes → warm jit caches) ----
 
@@ -107,14 +158,18 @@ class RecsysService:
         cfg = self.cfg
         if cfg.mode == "full":
             return full_topn(self.params, user_ids, topn=cfg.topn)
-        cand = retrieve_for_users(
-            self.index, self.sp, user_ids, n_seeds=cfg.n_seeds, cap=cfg.cap,
-            C=cfg.C, JK=self.JK, popular=self.popular,
-            window=cfg.seed_window)
-        return score_candidates(self.params, user_ids, cand, topn=cfg.topn,
-                                tile_b=cfg.tile_b,
-                                interpret=cfg.interpret_mode(),
-                                impl=cfg.scorer_impl())
+        return recommend_candidates(
+            self.planes, self.index, self.sp, user_ids, self.JK,
+            self.popular, n_seeds=cfg.n_seeds, cap=cfg.cap, C=cfg.C,
+            window=cfg.seed_window, pool_width=cfg.resolved_pool_width(),
+            fold_mates=cfg.fold_mates,
+            # host-side tail mirror: an empty tail (the steady state
+            # between ingests) skips the all-miss tail scan; the first
+            # insert flips the static flag → one retrace, which the
+            # ingestion path absorbs
+            tail_scan=self.index.tail_fill > 0,
+            topn=cfg.topn, tile_b=cfg.tile_b,
+            interpret=cfg.interpret_mode(), impl=cfg.scorer_impl())
 
     def warmup(self):
         """Trace + compile both shapes before the timed traffic."""
@@ -133,54 +188,73 @@ class RecsysService:
             self._flush_one()
 
     def flush(self) -> None:
-        """Drain everything pending (final partial batch is padded)."""
+        """Drain everything pending (final partial batch is padded) and
+        sync every dispatched flush."""
         while self._n_pending:
             self._flush_one()
+        while self._inflight:
+            self._sync_oldest()
 
     def _flush_one(self) -> None:
+        """Dispatch one micro-batch; sync the *previous* flush only after
+        this one is enqueued (double-buffered dispatch-ahead)."""
         mb = self.cfg.micro_batch
         # consume only as many queued arrays as one micro-batch needs — a
         # huge submit is sliced by view, not re-concatenated per flush
         chunks, n = [], 0
         while self._pending and n < mb:
-            a = self._pending.pop(0)
+            a = self._pending.popleft()
             chunks.append(a)
             n += a.shape[0]
         flat = (chunks[0] if len(chunks) == 1 else
                 np.concatenate(chunks) if chunks else np.zeros((0,), np.int32))
         take = flat[:mb]
         if flat.size > mb:
-            self._pending.insert(0, flat[mb:])
+            self._pending.appendleft(flat[mb:])
         n_real = take.size
         self._n_pending -= n_real
         if n_real < mb:  # pad the final partial batch to the jitted shape
             take = np.concatenate([take, np.zeros(mb - n_real, np.int32)])
 
         t0 = time.perf_counter()
-        scores, items = self._recommend(jnp.asarray(take))
-        jax.block_until_ready(items)
-        dt = time.perf_counter() - t0
+        out = self._recommend(jnp.asarray(take))      # async dispatch
+        self._inflight.append((take, n_real, t0, out))
+        self._dispatched += 1
+        while len(self._inflight) > 1:
+            self._sync_oldest()
 
-        self._flush_secs.append(dt)
+    def _sync_oldest(self) -> None:
+        take, n_real, t0, (scores, items) = self._inflight.popleft()
+        jax.block_until_ready(items)
+        now = time.perf_counter()
+        # latency: dispatch → result readiness (includes time queued
+        # behind the previous flush); busy wall: overlap counted once
+        self._flush_secs.append(now - t0)
+        self._busy_secs += now - max(self._last_ready, t0)
+        self._last_ready = now
         self._users_served += n_real
         self._results.append((take[:n_real],
                               np.asarray(scores)[:n_real],
                               np.asarray(items)[:n_real]))
 
     def take_results(self):
-        """[(user_ids, scores, items)] for every flush since the last take."""
+        """[(user_ids, scores, items)] for every flush since the last take.
+
+        Results are appended at sync time in dispatch order, so the k-th
+        tuple is the k-th flushed micro-batch and its rows line up with
+        the user ids that were submitted (padding already stripped)."""
         out, self._results = self._results, []
         return out
 
     def stats(self) -> dict:
         secs = np.asarray(self._flush_secs) if self._flush_secs else \
             np.zeros((1,))
-        total = float(secs.sum())
+        busy = self._busy_secs
         return dict(
             mode=self.cfg.mode,
-            batches=len(self._flush_secs),
+            batches=self._dispatched,
             users=self._users_served,
-            qps=self._users_served / total if total else 0.0,
+            qps=self._users_served / busy if busy else 0.0,
             p50_ms=float(np.percentile(secs, 50) * 1e3),
             p95_ms=float(np.percentile(secs, 95) * 1e3),
         )
@@ -190,13 +264,22 @@ class RecsysService:
     def ingest(self, new_sigs: jax.Array, new_ids: jax.Array,
                full_sigs: jax.Array | None = None) -> None:
         """Insert new items into the index tail; rebuild only on overflow
-        (rebuild requires ``full_sigs`` [q, N_total])."""
-        if lsh_index.needs_rebuild(self.index, int(new_ids.shape[0])):
+        (rebuild requires ``full_sigs`` [q, N_total]).
+
+        Crossing the empty-tail boundary (first insert, or a rebuild
+        folding the tail away) flips the static tail fast path in
+        `_recommend`, so re-warm here — the retrace lands in ingestion
+        time, not in the next request's latency window."""
+        had_tail = self.index.tail_fill > 0
+        rebuilt = lsh_index.needs_rebuild(self.index, int(new_ids.shape[0]))
+        if rebuilt:     # a rebuild also grows n_base → new trace shapes
             if full_sigs is None:
                 raise ValueError("tail overflow and no full_sigs to rebuild")
             self.index = lsh_index.rebuild(self.index, full_sigs)
         else:
             self.index = lsh_index.insert(self.index, new_sigs, new_ids)
+        if rebuilt or (self.index.tail_fill > 0) != had_tail:
+            self.warmup()
 
     def ingest_online_update(self, state, N_old: int) -> None:
         """Adopt a `core.online.online_update` result: swap in the grown
@@ -207,15 +290,22 @@ class RecsysService:
         The index is never rebuilt, but the grown parameter shapes force
         one retrace of the serving pipelines — re-warm here so the compile
         lands in ingestion time, not in a request's latency window."""
+        self.flush()        # drain in-flight work against the old planes
         sigs = simlsh.pack_bits(state.S >= 0)                 # [q, N_new]
-        if state.N > N_old:
-            self.ingest(sigs[:, N_old:],
-                        jnp.arange(N_old, state.N, dtype=jnp.int32),
-                        full_sigs=sigs)
+        # swap the grown state in *before* the index ingest: ingest()'s
+        # own tail-boundary warmup must compile against the new plane
+        # shapes, not trace a pipeline the swap immediately invalidates
+        assert state.N <= 1 << 30, \
+            "item ids must stay below 2^30 (the dedup hash mask)"
         self.params = state.params
+        self.planes = model.pack_serve_planes(state.params)
         self.sp = state.sp
         if self.JK is not None:
             self.JK = state.JK
         if self.cfg.n_popular:
             self.popular = popular_shortlist(state.params, self.cfg.n_popular)
+        if state.N > N_old:
+            self.ingest(sigs[:, N_old:],
+                        jnp.arange(N_old, state.N, dtype=jnp.int32),
+                        full_sigs=sigs)
         self.warmup()

@@ -7,16 +7,17 @@ import numpy as np
 import pytest
 
 from repro.core import simlsh, topk
-from repro.core.model import init_from_data
+from repro.core.model import (Params, init_from_data, pack_serve_planes,
+                              unpack_serve_planes)
 from repro.core.simlsh import SimLSHConfig
 from repro.data.sparse import from_coo
-from repro.kernels.candidate_score.kernel import candidate_score_topn
+from repro.kernels.candidate_score.kernel import NEG, candidate_score_topn
 from repro.kernels.candidate_score.ops import score_candidates
 from repro.kernels.candidate_score.ref import candidate_score_topn_ref
 from repro.serve import (RecsysService, ServeConfig, build_index,
-                         dedup_candidates, insert, lookup_items,
-                         lookup_signatures, rebuild, retrieve_for_items,
-                         retrieve_for_users, seed_items)
+                         compact_pool, dedup_candidates, insert,
+                         lookup_items, lookup_signatures, rebuild,
+                         retrieve_for_items, retrieve_for_users, seed_items)
 
 SENTINEL = topk.SENTINEL
 RNG = np.random.default_rng(0)
@@ -183,6 +184,82 @@ def test_dedup_truncation_not_biased_against_high_ids():
     assert (kept >= 48).any(), "top-quartile ids entirely evicted"
 
 
+def test_dedup_property_unique_set_and_hashed_truncation():
+    """Property sweep: (a) when a row has ≤ C unique ids the output is
+    *exactly* the unique set (minus exclusions); (b) on overflow the kept
+    ids are the C smallest under the invertible hash — the unbiased
+    truncation order — and are always a duplicate-free subset."""
+    _hash = lambda x: (x.astype(np.int64) * np.uint32(2654435761)) % (1 << 30)
+    rng = np.random.default_rng(7)
+    for trial in range(25):
+        B = int(rng.integers(1, 5))
+        L = int(rng.integers(1, 48))
+        C = int(rng.integers(1, 40))
+        ids = rng.integers(0, 60, (B, L)).astype(np.int32)
+        ids[rng.random((B, L)) < 0.3] = SENTINEL
+        excl = np.unique(rng.integers(0, 60, 4).astype(np.int32)) \
+            if trial % 2 else None
+        out = np.asarray(dedup_candidates(
+            jnp.asarray(ids), C=C,
+            exclude_sorted=jnp.asarray(excl) if excl is not None else None))
+        assert out.shape == (B, C)
+        for b in range(B):
+            want = set(ids[b][ids[b] != SENTINEL])
+            if excl is not None:
+                want -= set(excl)
+            got = out[b][out[b] != SENTINEL]
+            assert len(got) == len(set(got)), "duplicates in dedup output"
+            if len(want) <= C:
+                assert set(got) == want, f"unique set not preserved (b={b})"
+            else:
+                assert len(got) == C
+                kept = sorted(want, key=lambda x: _hash(np.int32(x)))[:C]
+                assert set(got) == set(kept), "not the hash-order prefix"
+
+
+def test_compact_pool_preserves_order_and_drops_sentinels():
+    pool = jnp.asarray([[SENTINEL, 4, SENTINEL, 9, 2, SENTINEL, 7, 1],
+                        [SENTINEL] * 8], jnp.int32)
+    out = np.asarray(compact_pool(pool, width=5))
+    assert list(out[0]) == [4, 9, 2, 7, 1]
+    assert list(out[1]) == [SENTINEL] * 5
+    # overflow drops the tail of the row, never reorders the kept prefix
+    out = np.asarray(compact_pool(pool, width=3))
+    assert list(out[0]) == [4, 9, 2]
+
+
+def test_fold_prefix_runs_merges_pairs():
+    from repro.serve.retrieve import _fold_prefix_runs
+    S = SENTINEL
+    runs = jnp.asarray([[[1, 2, S, S], [3, S, S, S]],
+                        [[S, S, S, S], [4, 5, 6, 7]]], jnp.int32)
+    out = np.asarray(_fold_prefix_runs(runs))        # cap=4 → width 6
+    assert out.shape == (2, 1, 6)
+    assert list(out[0, 0]) == [1, 2, 3, S, S, S]
+    assert list(out[1, 0]) == [4, 5, 6, 7, S, S]
+    # overflow: 4+4 survivors into 6 slots → right run's tail dropped
+    full = jnp.asarray([[[1, 2, 3, 4], [5, 6, 7, 8]]], jnp.int32)
+    assert list(np.asarray(_fold_prefix_runs(full))[0, 0]) == [1, 2, 3, 4, 5, 6]
+    # odd run counts pass the last run through (padded to the fold width)
+    odd = jnp.asarray([[[1, 2, S, S], [3, S, S, S], [9, S, S, S]]], jnp.int32)
+    out = np.asarray(_fold_prefix_runs(odd))
+    assert out.shape == (1, 2, 6) and list(out[0, 1]) == [9, S, S, S, S, S]
+
+
+def test_retrieve_pool_width_keeps_popular_and_uniqueness(indexed):
+    sp, cfg, sigs, index = indexed
+    users = jnp.arange(16, dtype=jnp.int32)
+    popular = jnp.asarray([2, 11, 17], jnp.int32)
+    cand = np.asarray(retrieve_for_users(
+        index, sp, users, n_seeds=4, cap=8, C=32, popular=popular,
+        pool_width=64))
+    assert cand.shape == (16, 32)
+    for u in range(16):
+        v = cand[u][cand[u] != SENTINEL]
+        assert len(v) == len(set(v)), "duplicate candidates"
+        assert {2, 11, 17} <= set(v), "popularity shortlist not reserved"
+
+
 def test_seed_items_are_top_rated(indexed):
     sp, *_ = indexed
     users = jnp.arange(8, dtype=jnp.int32)
@@ -213,45 +290,125 @@ def test_retrieve_for_users_shapes_and_popular(indexed):
 
 # ---------------------------------------------------------------- kernel
 
+
+def _plane_args(B, C, F, N, rng, mask_p=0.7):
+    """Random serve-plane scorer operands: urow [B, F+1] (μ+b folded in),
+    plane [N, F+1], cand ids [B, C] (pre-clipped), mask [B, C]."""
+    a = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32))
+    urow, plane = a(B, F + 1), a(N, F + 1)
+    cand = jnp.asarray(rng.integers(0, N, (B, C)).astype(np.int32))
+    mask = jnp.asarray((rng.random((B, C)) < mask_p).astype(np.float32))
+    return urow, plane, cand, mask
+
+
 @pytest.mark.parametrize("B,C,F,topn,tile", [
     (32, 64, 16, 10, 8), (7, 33, 8, 5, 16), (64, 128, 32, 1, 32)])
 def test_candidate_score_kernel_matches_ref(B, C, F, topn, tile):
-    a = lambda *s: jnp.asarray(RNG.normal(size=s).astype(np.float32))
-    u, bu, vc, bc = a(B, F), a(B), a(B, C, F), a(B, C)
-    mask = jnp.asarray((RNG.random((B, C)) < 0.7).astype(np.float32))
-    s1, i1 = candidate_score_topn(u, bu, vc, bc, mask, topn=topn, tile_b=tile)
-    s2, i2 = candidate_score_topn_ref(u, bu, vc, bc, mask, topn=topn)
+    """In-kernel gather path (interpret) ≡ tiled-scan jnp ref."""
+    urow, plane, cand, mask = _plane_args(B, C, F, 200,
+                                          np.random.default_rng(B * 3 + C))
+    s1, i1 = candidate_score_topn(urow, plane, cand, mask, topn=topn,
+                                  tile_b=tile)
+    s2, i2 = candidate_score_topn_ref(urow, plane, cand, mask, topn=topn,
+                                      tile_b=tile)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
 
 
 def test_candidate_score_kernel_all_masked_rows():
-    a = lambda *s: jnp.asarray(RNG.normal(size=s).astype(np.float32))
-    B, C, F = 9, 16, 8
-    u, bu, vc, bc = a(B, F), a(B), a(B, C, F), a(B, C)
-    mask = jnp.zeros((B, C), jnp.float32)
-    s1, i1 = candidate_score_topn(u, bu, vc, bc, mask, topn=4, tile_b=4)
-    s2, i2 = candidate_score_topn_ref(u, bu, vc, bc, mask, topn=4)
+    urow, plane, cand, _ = _plane_args(9, 16, 8, 64, np.random.default_rng(5))
+    mask = jnp.zeros((9, 16), jnp.float32)
+    s1, i1 = candidate_score_topn(urow, plane, cand, mask, topn=4, tile_b=4)
+    s2, i2 = candidate_score_topn_ref(urow, plane, cand, mask, topn=4,
+                                      tile_b=4)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
     np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
 
 
-def test_score_candidates_pallas_vs_ref_pipeline(indexed):
+def _pr1_cube_scorer(params, user_ids, cand, *, topn):
+    """The PR 1 scorer math — XLA-gathered [B, C, F] cube + `top_k` — as
+    the old-vs-new parity oracle (same first-index tie rule)."""
+    safe = jnp.clip(cand, 0, params.V.shape[0] - 1)
+    mask = cand != SENTINEL
+    s = (jnp.einsum("bf,bcf->bc", params.U[user_ids], params.V[safe])
+         + params.bh[safe] + (params.mu + params.b[user_ids])[:, None])
+    scores, idx = jax.lax.top_k(jnp.where(mask, s, NEG), topn)
+    items = jnp.take_along_axis(cand, idx, axis=1)
+    return scores, jnp.where(scores > NEG, items, SENTINEL)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("C,topn,tile", [(32, 5, 8), (48, 10, 16), (24, 3, 4)])
+def test_scorer_matches_pr1_cube_scorer(indexed, impl, C, topn, tile):
+    """New plane scorer ≡ the old cube scorer on identical candidate sets,
+    across tile_b/C/topn sweeps and both impls (ISSUE 5 parity gate)."""
     sp, cfg, sigs, index = indexed
     params = init_from_data(jax.random.PRNGKey(1), sp, 16, 8)
+    planes = pack_serve_planes(params)
     users = jnp.arange(24, dtype=jnp.int32)
-    cand = retrieve_for_users(index, sp, users, n_seeds=4, cap=8, C=32)
-    s1, i1 = score_candidates(params, users, cand, topn=5, impl="pallas")
-    s2, i2 = score_candidates(params, users, cand, topn=5, impl="ref")
-    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+    cand = retrieve_for_users(index, sp, users, n_seeds=4, cap=8, C=C)
+    s_new, i_new = score_candidates(planes, users, cand, topn=topn,
+                                    tile_b=tile, impl=impl)
+    s_old, i_old = _pr1_cube_scorer(params, users, cand, topn=topn)
+    np.testing.assert_allclose(np.asarray(s_new), np.asarray(s_old),
                                rtol=1e-5, atol=1e-5)
-    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(i_new), np.asarray(i_old))
     # returned items must come from the candidate set
     c = np.asarray(cand)
     for u in range(24):
-        got = np.asarray(i1[u])
+        got = np.asarray(i_new[u])
         assert set(got[got != SENTINEL]) <= set(c[u])
+
+
+def test_score_candidates_accepts_params_and_planes(indexed):
+    """`Params` is packed on the fly — same result as prebuilt planes."""
+    sp, cfg, sigs, index = indexed
+    params = init_from_data(jax.random.PRNGKey(1), sp, 16, 8)
+    users = jnp.arange(8, dtype=jnp.int32)
+    cand = retrieve_for_users(index, sp, users, n_seeds=4, cap=8, C=32)
+    s1, i1 = score_candidates(params, users, cand, topn=5, impl="ref")
+    s2, i2 = score_candidates(pack_serve_planes(params), users, cand,
+                              topn=5, impl="ref")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_serve_planes_roundtrip(indexed):
+    sp, *_ = indexed
+    params = init_from_data(jax.random.PRNGKey(2), sp, 16, 8)
+    back = unpack_serve_planes(pack_serve_planes(params))
+    for f in ("U", "V", "b", "bh", "mu"):
+        np.testing.assert_array_equal(np.asarray(getattr(back, f)),
+                                      np.asarray(getattr(params, f)))
+
+
+def test_scorer_hlo_has_no_candidate_cube():
+    """ISSUE 5 acceptance: no gather in the scorer's HLO produces a
+    B×C×F (or B×C×(F+1)) intermediate — only the tile-sized one."""
+    B, C, F, N, tile = 64, 96, 24, 4000, 8
+    rng = np.random.default_rng(0)
+    planes_args = _plane_args(B, C, F, N, rng)
+    users = jnp.arange(B, dtype=jnp.int32)
+    params = Params(U=planes_args[1][:, :F], V=planes_args[1][:, :F],
+                    b=jnp.zeros((N,)), bh=planes_args[1][:, F],
+                    W=jnp.zeros((N, 0)), C=jnp.zeros((N, 0)),
+                    mu=jnp.asarray(0.0))
+    planes = pack_serve_planes(params)
+    cand = planes_args[2]
+    for impl in ("ref", "pallas"):
+        txt = jax.jit(
+            lambda p, u, c, impl=impl: score_candidates(
+                p, u, c, topn=10, tile_b=tile, interpret=True, impl=impl)
+        ).lower(planes, users[:B], cand).as_text()
+        for bad in (f"{B}x{C}x{F}xf32", f"{B}x{C}x{F + 1}xf32"):
+            assert bad not in txt, f"candidate cube {bad} in {impl} HLO"
+    # the check looks at real lowered text: the ref's *tile* gather is there
+    txt = jax.jit(
+        lambda p, u, c: score_candidates(p, u, c, topn=10, tile_b=tile,
+                                         interpret=True, impl="ref")
+    ).lower(planes, users[:B], cand).as_text()
+    assert f"{tile}x{C}x{F + 1}xf32" in txt
 
 
 # ---------------------------------------------------------------- service
@@ -294,6 +451,62 @@ def test_service_micro_batching_and_partial_flush(indexed):
     res = svc.take_results()
     assert sum(r[0].shape[0] for r in res) == 10
     assert all(r[2].shape[1] == 3 for r in res)
+
+
+def test_pipelined_flush_ordering_maps_results_to_users(indexed):
+    """Dispatch-ahead flushes must hand each user their own result, in
+    flush order, with the padded final batch stripped correctly.  Params
+    are planted so user u's exact top-1 item is u itself (U = 5·I,
+    V = I): any cross-flush or cross-row mixup is immediately visible."""
+    sp, cfg, sigs, index = indexed
+    M = N = F = 16
+    eye = jnp.eye(M, dtype=jnp.float32)
+    params = Params(U=5.0 * eye, V=eye, b=jnp.zeros((M,)),
+                    bh=jnp.zeros((N,)), W=jnp.zeros((N, 1)),
+                    C=jnp.zeros((N, 1)), mu=jnp.asarray(0.0))
+    scfg = ServeConfig(mode="full", topn=3, micro_batch=M, n_popular=0)
+    svc = RecsysService(params, index, sp, scfg).warmup()
+    rng = np.random.default_rng(11)
+    users = rng.integers(0, M, 3 * M + 5).astype(np.int32)
+    for chunk in np.split(users, [7, 20, 29, 41]):   # ragged submits
+        svc.submit(chunk)
+    assert svc.stats()["batches"] == 3               # dispatched, not synced
+    svc.flush()
+    res = svc.take_results()
+    assert len(res) == 4 and res[-1][0].shape[0] == 5   # padded final batch
+    got_users = np.concatenate([r[0] for r in res])
+    np.testing.assert_array_equal(got_users, users)     # flush order kept
+    for r_users, _, r_items in res:
+        np.testing.assert_array_equal(r_items[:, 0], r_users)
+    st = svc.stats()
+    assert st["users"] == users.shape[0] and st["batches"] == 4
+    assert st["qps"] > 0 and st["p95_ms"] >= st["p50_ms"]
+
+
+def test_pipelined_flush_ordering_candidate_mode(indexed):
+    """Same per-user identity check through the fused candidate pipeline:
+    every top-1 score must equal that item's exact full score for *that*
+    user — a result swapped across in-flight flushes would not."""
+    sp, cfg, sigs, index = indexed
+    params = init_from_data(jax.random.PRNGKey(1), sp, 16, 8)
+    scfg = ServeConfig(topn=3, micro_batch=8, C=32, n_seeds=4, cap=8,
+                       n_popular=0)
+    svc = RecsysService(params, index, sp, scfg).warmup()
+    users = np.arange(24, dtype=np.int32)
+    for u in users:          # one-at-a-time submits → 3 pipelined flushes
+        svc.submit(u)
+    svc.flush()
+    res = svc.take_results()
+    assert [r[0].shape[0] for r in res] == [8, 8, 8]
+    for r_users, r_scores, r_items in res:
+        safe = np.clip(r_items, 0, sp.N - 1)
+        exact = (np.asarray(params.mu) + np.asarray(params.b)[r_users][:, None]
+                 + np.asarray(params.bh)[safe]
+                 + np.einsum("bf,bnf->bn", np.asarray(params.U)[r_users],
+                             np.asarray(params.V)[safe]))
+        ok = r_items != SENTINEL
+        np.testing.assert_allclose(r_scores[ok], exact[ok],
+                                   rtol=1e-4, atol=1e-4)
 
 
 def test_service_ingest_serves_new_items(indexed):
