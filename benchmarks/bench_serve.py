@@ -48,12 +48,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from repro import obs
 from repro.core import simlsh, topk
 from repro.core.model import Params, pack_serve_planes
 from repro.data.sparse import from_coo
-from repro.kernels.candidate_score.ops import score_candidates
-from repro.serve import (RecsysService, ServeConfig, build_index, full_topn,
-                         retrieve_for_users)
+from repro.serve import (RecsysService, ServeConfig, build_index, full_topn)
 
 CHECK_QPS_RATIO = 2.0    # candidate path must stay ≥ 2× full scoring
 CHECK_RECALL = 0.85      # recall@topn floor vs the exact top-N
@@ -124,34 +123,57 @@ def recall_at(svc: RecsysService, params, probe_users, topn: int) -> float:
 
 
 def stage_breakdown(svc: RecsysService, users: jax.Array, repeats: int = 5):
-    """Retrieval-alone vs scoring-alone time at the flush shapes (min over
-    ``repeats`` — same noise-robust statistic as bench_train)."""
-    cfg = svc.cfg
+    """Per-stage flush times via `RecsysService.profile_flush` — the
+    staged path whose nested obs spans (flush → retrieve(.pool/.dedup) →
+    score) also feed the Chrome trace (--trace).  Min over ``repeats``
+    after one warmup run — same noise-robust statistic as bench_train."""
+    svc.profile_flush(users)          # compile the staged dispatches
+    mins: dict = {}
+    for _ in range(repeats):
+        for k, v in svc.profile_flush(users).items():
+            mins[k] = min(mins.get(k, v), v)
+    return dict(retrieve_ms=mins["serve.flush.retrieve"] * 1e3,
+                score_ms=mins["serve.flush.score"] * 1e3,
+                pool_ms=mins["serve.flush.retrieve.pool"] * 1e3,
+                dedup_ms=mins["serve.flush.retrieve.dedup"] * 1e3,
+                flush_ms=mins["serve.flush"] * 1e3)
 
-    def retrieve():
-        return retrieve_for_users(
-            svc.index, svc.sp, users, n_seeds=cfg.n_seeds, cap=cfg.cap,
-            C=cfg.C, JK=svc.JK, popular=svc.popular, window=cfg.seed_window,
-            pool_width=cfg.resolved_pool_width(), fold_mates=cfg.fold_mates,
-            tail_scan=svc.index.tail_fill > 0)
 
-    cand = jax.block_until_ready(retrieve())
-
-    def score():
-        return score_candidates(svc.planes, users, cand, topn=cfg.topn,
-                                tile_b=cfg.tile_b,
-                                interpret=cfg.interpret_mode(),
-                                impl=cfg.scorer_impl())
-
-    jax.block_until_ready(score())
-    out = {}
-    for name, fn in (("retrieve_ms", retrieve), ("score_ms", score)):
-        times = []
-        for _ in range(repeats):
+def serve_obs_overhead(params, index, sp, cfg, JK, stream, n_batches: int,
+                       repeats: int = 12) -> dict:
+    """Enabled-vs-disabled obs cost on the serving hot path: identical
+    request streams through two services whose only difference is the
+    registry's enabled flag, QPS measured externally (wall-clock over the
+    stream) so both arms are timed the same way.  Median-of-``repeats``
+    per arm, repeats interleaved with the arm order swapped each time:
+    under bursty container noise the best-of statistic decorrelates
+    between arms (one quiet window lands in a single arm and swings the
+    ratio double-digits — measured on bench_train's twin of this), while
+    the median of order-swapped interleaved repeats cancels the bursts.
+    Target |overhead_frac| ≤ 0.02 (noise can flip the sign)."""
+    svcs = {label: RecsysService(params, index, sp, cfg, JK=JK,
+                                 registry=obs.Registry(enabled=enabled))
+            for label, enabled in (("enabled", True), ("disabled", False))}
+    qps = {label: [] for label in svcs}
+    for svc in svcs.values():
+        svc.warmup()
+    for rep in range(repeats):     # interleaved: same noise window per arm,
+        order = list(svcs.items())  # order swapped per repeat so neither arm
+        if rep % 2:                 # systematically leads into noise bursts
+            order.reverse()
+        for label, svc in order:
+            users = 0
             t0 = time.perf_counter()
-            jax.block_until_ready(fn())
-            times.append(time.perf_counter() - t0)
-        out[name] = min(times) * 1e3
+            for batch_users in stream(n_batches):
+                svc.submit(batch_users)
+                users += batch_users.shape[0]
+            svc.flush()
+            qps[label].append(users / (time.perf_counter() - t0))
+            svc.take_results()
+    out = {f"{label}_qps": float(np.median(q)) for label, q in qps.items()}
+    out["overhead_frac"] = out["disabled_qps"] / out["enabled_qps"] - 1.0
+    out["repeats"] = repeats
+    out["statistic"] = "median-over-interleaved-order-swapped-repeats"
     return out
 
 
@@ -205,8 +227,14 @@ def bench_size(N: int, *, batch: int, full_batches: int, cand_batches: int,
     emit(f"serve.breakdown.N{N}", (breakdown["retrieve_ms"]
                                    + breakdown["score_ms"]) / 1e3,
          f"retrieve_ms={breakdown['retrieve_ms']:.1f};"
-         f"score_ms={breakdown['score_ms']:.1f}")
+         f"score_ms={breakdown['score_ms']:.1f};"
+         f"dedup_ms={breakdown['dedup_ms']:.1f}")
     cube_free = scorer_hlo_cube_free(cand_svc, bd_users)
+
+    overhead = serve_obs_overhead(params, index, sp, cfg, JK, stream,
+                                  min(cand_batches, 8))
+    emit(f"serve.obs_overhead.N{N}", 1.0 / max(overhead["enabled_qps"], 1e-9),
+         f"frac={overhead['overhead_frac']:+.4f}")
 
     probe_users = jnp.asarray(rng.integers(0, M, probe), jnp.int32)
     rec = recall_at(cand_svc, params, probe_users, topn)
@@ -221,6 +249,7 @@ def bench_size(N: int, *, batch: int, full_batches: int, cand_batches: int,
                   p95_ms=st_cand["p95_ms"], batches=st_cand["batches"]),
         qps_ratio=st_cand["qps"] / max(st_full["qps"], 1e-9),
         recall=rec, breakdown=breakdown, scorer_hlo_cube_free=cube_free,
+        obs_overhead=overhead,
         # kept for the old summary format / PR 1 bench compatibility
         full_qps=st_full["qps"], cand_qps=st_cand["qps"])
 
@@ -289,7 +318,15 @@ def main(argv=None):
     ap.add_argument("--pr1", default=None, metavar="DIR",
                     help="worktree of the pre-overhaul code; its bench is "
                          "run in the same window → pr1_same_window")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the run's obs spans (flush latencies + the "
+                         "staged retrieve/score/dedup breakdown) as Chrome "
+                         "trace-event JSON for Perfetto")
     args = ap.parse_args(argv)
+    if args.trace:
+        obs.enable()   # every service's private registry mirrors its
+                       # spans here → one trace for the whole run, while
+                       # per-service stats stay isolated
 
     if args.pr1 and args.seed != 0:
         # the PR 1 bench has no --seed flag (its catalogs are seed-0): a
@@ -329,8 +366,12 @@ def main(argv=None):
         protocol=dict(
             batch=args.batch, topn=args.topn,
             timing="QPS = users / non-overlapping busy wall-time across "
-                   "dispatch-ahead flushes (compile excluded via warmup); "
-                   "breakdown stages timed alone, min over 5 repeats",
+                   "dispatch-ahead flushes (compile excluded via warmup), "
+                   "read from the repro.obs registry (single timing "
+                   "source); breakdown via profile_flush staged spans, min "
+                   "over 5 repeats; obs_overhead = disabled/enabled median-"
+                   "QPS ratio - 1 over interleaved order-swapped repeats "
+                   "(target ≤0.02)",
             floors=dict(qps_ratio=CHECK_QPS_RATIO, recall=CHECK_RECALL)),
         sizes=results,
     )
@@ -344,13 +385,18 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")
+    if args.trace:
+        obs.write_trace(args.trace)
+        print(f"# trace: {args.trace} "
+              f"({len(obs.chrome_trace()['traceEvents'])} events)")
 
     for r in results:
         print(f"# N={r['N']}: full {r['full']['qps']:,.0f} qps | cand "
               f"{r['cand']['qps']:,.0f} qps ({r['qps_ratio']:.1f}x) | "
               f"recall@{args.topn} {r['recall']:.3f} | retrieve "
               f"{r['breakdown']['retrieve_ms']:.0f} ms + score "
-              f"{r['breakdown']['score_ms']:.0f} ms / flush")
+              f"{r['breakdown']['score_ms']:.0f} ms / flush | obs "
+              f"{r['obs_overhead']['overhead_frac']:+.3f}")
     if args.pr1:
         for k, v in doc["pr1_same_window"].items():
             if not isinstance(v, dict):       # metadata (baseline commit)

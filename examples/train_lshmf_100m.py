@@ -8,6 +8,7 @@ the CPU run in minutes; the trainer streams epochs of conflict-averaged
 mini-batches, each jit-compiled once).
 
     PYTHONPATH=src python examples/train_lshmf_100m.py [--small]
+        [--trace /tmp/train_trace.json]
 """
 import argparse
 import dataclasses
@@ -15,6 +16,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.simlsh import SimLSHConfig
 from repro.data import synthetic as syn
 from repro.data.sparse import train_test_split
@@ -27,6 +29,9 @@ def main():
                     help="10M-param variant (fast CI-style run)")
     ap.add_argument("--resume", action="store_true",
                     help="resume from the checkpoint dir instead of fresh")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the fit's obs spans as Chrome trace-event "
+                         "JSON (load in https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     if args.small:
@@ -59,6 +64,28 @@ def main():
     res = fit(tr, te, (M, N), cfg, log=print)
     print(f"done: rmse={res.history[-1][2]:.4f}, "
           f"neighbour stage {res.neighbour_seconds:.1f}s")
+
+    # --- observability summary (ISSUE 6): every number below is read
+    # back from the fit's obs registry — the same spans a --trace export
+    # shows in Perfetto, so the printed summary and the trace can't drift
+    reg = res.registry
+    snap = reg.snapshot()
+    print("\nobs summary (from the fit registry):")
+    for name in ("train.neighbours", "train.prep", "train.compile",
+                 "train.epoch", "train.epoch.eval", "train.ckpt"):
+        s = snap["histograms"].get(name)
+        if not s or not s["count"]:
+            continue
+        print(f"  {name:<18} n={s['count']:>3}  total={s['sum']:7.2f}s  "
+              f"p50={s['p50'] * 1e3:8.1f}ms  p95={s['p95'] * 1e3:8.1f}ms")
+    steady = reg.hist_summary("train.epoch")
+    if steady["count"]:
+        print(f"  steady-state epoch min={steady['min']:.3f}s "
+              f"(compile {res.compile_seconds:.2f}s charged separately)")
+    if args.trace:
+        obs.write_trace(args.trace, reg)
+        print(f"  trace → {args.trace} "
+              f"({snap['spans']['retained']} spans; open in Perfetto)")
 
 
 if __name__ == "__main__":

@@ -35,11 +35,16 @@ def init(cfg: NCFConfig, key):
         p["mlp_u"] = s * jax.random.normal(ks[3], (cfg.M, cfg.F))
         p["mlp_v"] = s * jax.random.normal(ks[4], (cfg.N, cfg.F))
         dims = (2 * cfg.F,) + cfg.mlp_layers
-        p["mlp_w"] = [s * jax.random.normal(jax.random.fold_in(ks[5], li),
-                                            (dims[li], dims[li + 1]))
+        # He-scaled tower init: the seed's flat s=0.01 starved the relu
+        # stack of signal (logits ~1e-6 → the MLP barely moved off the
+        # 0.693 BCE plateau in hundreds of Adam steps)
+        p["mlp_w"] = [jnp.sqrt(2.0 / dims[li])
+                      * jax.random.normal(jax.random.fold_in(ks[5], li),
+                                          (dims[li], dims[li + 1]))
                       for li in range(len(dims) - 1)]
         p["mlp_b"] = [jnp.zeros((d,)) for d in dims[1:]]
-        p["mlp_h"] = s * jax.random.normal(ks[6], (cfg.mlp_layers[-1],))
+        p["mlp_h"] = (jnp.sqrt(1.0 / cfg.mlp_layers[-1])
+                      * jax.random.normal(ks[6], (cfg.mlp_layers[-1],)))
     return p
 
 

@@ -22,11 +22,11 @@ re-sorting Ω̂ ∪ ΔΩ from scratch; see ``OnlineState.stats``.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import simlsh, topk
 from repro.core.model import Params, assemble
 from repro.core.sgd import Hyper, culsh_step, lr_decay
@@ -92,52 +92,82 @@ def masked_culsh_step(p: Params, bt, hp: Hyper, decay, M_old: int, N_old: int):
 def online_update(st: OnlineState, new_rows, new_cols, new_vals,
                   cfg: simlsh.SimLSHConfig, hp: Hyper, key, *,
                   M_new: int, N_new: int, K: int, epochs: int = 3,
-                  batch: int = 4096) -> OnlineState:
-    """Alg. 4 end-to-end.  ``new_*`` are ΔΩ triples in the grown id space."""
+                  batch: int = 4096,
+                  registry: obs.Registry | None = None) -> OnlineState:
+    """Alg. 4 end-to-end.  ``new_*`` are ΔΩ triples in the grown id space.
+
+    Stage timings (re-sign/merge/topk/train) are recorded as nested obs
+    spans under ``online.update``; `OnlineState.stats` reads them back
+    from the registry (ISSUE 6 — no second stopwatch), and the ΔΩ sizes
+    land in the registry's event log for JSONL time-series export."""
     if st.hash_key is None:
         raise ValueError(
             "OnlineState.hash_key is unset — pass the key the accumulators "
             "were encoded with (FitResult.hash_key), else ΔΩ is hashed with "
             "a different Φ family and incremental signatures are garbage")
+    reg = registry if registry is not None else obs.scoped()
     k_grow, k_topk, k_train = jax.random.split(key, 3)
 
-    # (1)(2) incremental hashing + re-sign — lines 1–6 (same Φ family!)
-    S2, sigs = simlsh.update_accumulators(
-        st.S, new_rows, new_cols, new_vals, cfg, st.hash_key, N_new)
+    with reg.span("online.update"):
+        # (1)(2) incremental hashing + re-sign — lines 1–6 (same Φ family!)
+        with reg.span("online.resign"):
+            S2, sigs = simlsh.update_accumulators(
+                st.S, new_rows, new_cols, new_vals, cfg, st.hash_key, N_new)
+            jax.block_until_ready(sigs)
 
-    # merged interaction matrix: sorted-array union of Ω̂ and ΔΩ — the old
-    # from_coo rebuild re-lexsorted all of Ω̂ per update, O(n log n) for a
-    # d-sized delta; the merge is O(d log d + d log n) + one linear scatter
-    t_merge = time.perf_counter()
-    sp_all = merge_coo(st.sp, new_rows, new_cols, new_vals, (M_new, N_new))
-    jax.block_until_ready(sp_all.rows)
-    merge_secs = time.perf_counter() - t_merge
+        # merged interaction matrix: sorted-array union of Ω̂ and ΔΩ — the
+        # old from_coo rebuild re-lexsorted all of Ω̂ per update, O(n log n)
+        # for a d-sized delta; the merge is O(d log d + d log n) + one
+        # linear scatter
+        with reg.span("online.merge"):
+            sp_all = merge_coo(st.sp, new_rows, new_cols, new_vals,
+                               (M_new, N_new))
+            jax.block_until_ready(sp_all.rows)
 
-    # (3) Top-K: old columns keep their lists; new columns search Ĵ — lines 7–9
-    JK_all = topk.topk_from_signatures(sigs, k_topk, K=K, band_cap=cfg.band_cap)
-    JK = jnp.concatenate([st.JK, JK_all[st.N:]], axis=0) if N_new > st.N else st.JK
+        # (3) Top-K: old cols keep their lists; new cols search Ĵ — lines 7–9
+        with reg.span("online.topk"):
+            JK_all = topk.topk_from_signatures(sigs, k_topk, K=K,
+                                               band_cap=cfg.band_cap)
+            JK = (jnp.concatenate([st.JK, JK_all[st.N:]], axis=0)
+                  if N_new > st.N else st.JK)
+            jax.block_until_ready(JK)
 
-    # (4)(5) train only new params on ΔΩ — lines 10–15
-    p = grow_params(st.params, M_new, N_new, k_grow)
-    delta = from_coo(new_rows, new_cols, new_vals, (M_new, N_new))
+        # (4)(5) train only new params on ΔΩ — lines 10–15
+        with reg.span("online.train"):
+            p = grow_params(st.params, M_new, N_new, k_grow)
+            delta = from_coo(new_rows, new_cols, new_vals, (M_new, N_new))
 
-    for ep in range(epochs):
-        kk = jax.random.fold_in(k_train, ep)
-        idx, valid = epoch_batches(kk, delta.nnz, min(batch, delta.nnz))
-        decay = lr_decay(hp, jnp.asarray(ep))
+            for ep in range(epochs):
+                kk = jax.random.fold_in(k_train, ep)
+                idx, valid = epoch_batches(kk, delta.nnz,
+                                           min(batch, delta.nnz))
+                decay = lr_decay(hp, jnp.asarray(ep))
 
-        def body(pp, ib):
-            bidx, bvalid = ib
-            # bidx indexes ΔΩ's own triples — indexing sp_all here would
-            # train on whatever sorts first in the merged matrix instead of
-            # the new interactions; neighbour ratings still come from Ω̂
-            bt = assemble(delta, JK, bidx, bvalid, lookup_sp=sp_all)
-            return masked_culsh_step(pp, bt, hp, decay, st.M, st.N), None
+                def body(pp, ib):
+                    bidx, bvalid = ib
+                    # bidx indexes ΔΩ's own triples — indexing sp_all here
+                    # would train on whatever sorts first in the merged
+                    # matrix instead of the new interactions; neighbour
+                    # ratings still come from Ω̂
+                    bt = assemble(delta, JK, bidx, bvalid, lookup_sp=sp_all)
+                    return (masked_culsh_step(pp, bt, hp, decay,
+                                              st.M, st.N), None)
 
-        p, _ = jax.lax.scan(body, p, (idx, valid))
+                p, _ = jax.lax.scan(body, p, (idx, valid))
+            jax.block_until_ready(p.U)
 
+    reg.counter_add("online.updates")
+    reg.counter_add("online.delta_nnz", int(delta.nnz))
+    reg.event("online.update", delta_nnz=int(delta.nnz),
+              merged_nnz=int(sp_all.nnz), M_new=M_new, N_new=N_new,
+              new_cols=N_new - st.N, new_rows=M_new - st.M)
+    last = lambda name: reg.span_durations(name)[-1]
     return OnlineState(params=p, S=S2, JK=JK, sp=sp_all, M=M_new, N=N_new,
                        hash_key=st.hash_key,
-                       stats=dict(merge_seconds=merge_secs,
+                       stats=dict(merge_seconds=last("online.merge"),
+                                  resign_seconds=last("online.resign"),
+                                  topk_seconds=last("online.topk"),
+                                  train_seconds=last("online.train"),
+                                  update_seconds=last("online.update"),
                                   delta_nnz=int(delta.nnz),
                                   merged_nnz=int(sp_all.nnz)))

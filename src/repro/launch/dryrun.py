@@ -31,7 +31,7 @@ import jax
 from repro.configs import base as CB
 from repro.launch import roofline as RL
 from repro.launch import specs as SPECS
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.models import lm, sharding, steps
 
 
@@ -73,7 +73,7 @@ def run_cell(arch: str, shape_name: str, mesh, *, do_roofline: bool,
         axes = sharding.mesh_axes(mesh)
         t0 = time.time()
         fn, in_sh, args, donate = build_cell(cfg, shape, mesh, axes)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(fn, in_shardings=in_sh,
                               donate_argnums=donate).lower(*args)
             t_lower = time.time() - t0

@@ -9,19 +9,43 @@ from __future__ import annotations
 
 import jax
 
+# ---- jax-version compat -----------------------------------------------------
+# The pinned jax (0.4.37) predates three APIs newer call sites use:
+# `jax.make_mesh(..., axis_types=...)`, `jax.sharding.set_mesh`, and the
+# top-level `jax.shard_map`.  These shims resolve to the modern API when
+# present and the 0.4.x equivalent otherwise, so the same code runs on both.
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # 0.4.x: experimental namespace only
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def compat_mesh(shape, axes):
+    """`jax.make_mesh` with Auto axis_types where the kwarg exists."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh``: `jax.sharding.set_mesh` when it
+    exists, else the legacy `with mesh:` global-mesh context."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 2):
     """Small mesh over whatever devices exist (tests on CPU hosts)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_mesh((data, model), ("data", "model"))
 
 
 def make_shard_mesh(shards: int | None = None):

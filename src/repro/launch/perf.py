@@ -23,7 +23,7 @@ import jax
 from repro.configs import base as CB
 from repro.launch import roofline as RL
 from repro.launch.dryrun import build_cell
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.models import sharding
 
 
@@ -60,7 +60,7 @@ def run(arch, shape_name, overrides, tag, do_mem, multi_pod=False):
                / max(rl["t_step"], 1e-12))
     if do_mem:
         fn, in_sh, args, donate = build_cell(cfg, shape, mesh, axes)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             compiled = jax.jit(fn, in_shardings=in_sh,
                                donate_argnums=donate).lower(*args).compile()
         ma = compiled.memory_analysis()

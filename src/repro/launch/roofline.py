@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.launch import specs as SPECS
+from repro.launch.mesh import use_mesh
 from repro.models import lm, sharding, steps
 
 PEAK_FLOPS = 197e12
@@ -103,7 +104,7 @@ class Cost:
 
 
 def _compile_cost(fn, in_shardings, args, mesh) -> Cost:
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args)
         compiled = lowered.compile()
     ca = compiled.cost_analysis() or {}

@@ -161,6 +161,63 @@ def dedup_candidates(cands: jax.Array, *, C: int,
                      (h * jnp.int32(244002641)) & _MASK30)
 
 
+@partial(jax.jit, static_argnames=("n_seeds", "cap", "window",
+                                   "fold_mates", "tail_scan"))
+def candidate_pool(index: LSHIndex, sp: SparseMatrix, user_ids: jax.Array,
+                  *, n_seeds: int, cap: int,
+                  JK: jax.Array | None = None,
+                  window: int = 64,
+                  fold_mates: bool = True,
+                  tail_scan: bool = True) -> jax.Array:
+    """The pre-dedup candidate union: seeds, their bucket-mates (folded),
+    their Top-K lists, and colliding tail items — [B, L] SENTINEL-strewn.
+    Exposed separately so the observability profile path
+    (`RecsysService.profile_flush`) can time pool building apart from the
+    dedup sort; `retrieve_for_users` fuses both into one program."""
+    B = user_ids.shape[0]
+    seeds = seed_items(sp, user_ids, n_seeds=n_seeds, window=window)  # [B, S]
+
+    # an empty (or absent) tail means every seed id lives in the sorted
+    # core — lookup can take the slot-only fast path
+    base_only = (not tail_scan) or index.tail_cap == 0
+    mates = lookup_items(index, seeds.reshape(-1), cap=cap,
+                         include_tail=False, assume_base=base_only)
+    mates = mates.reshape(B, -1, cap)             # [B, S·q, cap] prefix runs
+    if fold_mates:
+        mates = _fold_prefix_runs(mates)
+    pools = [mates.reshape(B, -1), seeds]
+    if JK is not None:
+        safe = jnp.clip(seeds, 0, JK.shape[0] - 1)
+        nb = jnp.where((seeds != SENTINEL)[:, :, None], JK[safe], SENTINEL)
+        pools.append(nb.reshape(B, -1))
+    if index.tail_cap and tail_scan:
+        # one tail scan per *user*: tail items colliding with any seed/band
+        qsigs = _sig_of_items(index, seeds)                   # [q, B, S]
+        hit = jnp.any(qsigs[..., None] == index.tail_sigs[:, None, None, :],
+                      axis=(0, 2))                            # [B, T]
+        pools.append(jnp.where(hit, index.tail_ids[None, :], SENTINEL))
+    return jnp.concatenate(pools, axis=1)
+
+
+@partial(jax.jit, static_argnames=("C", "pool_width"))
+def finalize_candidates(pool: jax.Array, *, C: int,
+                        popular: jax.Array | None = None,
+                        pool_width: int = 0) -> jax.Array:
+    """Pool → [B, C] unique candidates: optional pre-compaction, the
+    single-sort dedup, and the reserved popularity slots."""
+    B = pool.shape[0]
+    if 0 < pool_width < pool.shape[1]:
+        pool = compact_pool(pool, width=pool_width)
+    if popular is None:
+        return dedup_candidates(pool, C=C)
+    # popularity shortlist gets reserved slots at the end of the row
+    P = popular.shape[0]
+    assert C > P, f"candidate budget C={C} must exceed the shortlist P={P}"
+    core = dedup_candidates(pool, C=C - P, exclude_sorted=jnp.sort(popular))
+    return jnp.concatenate(
+        [core, jnp.broadcast_to(popular[None, :], (B, P))], axis=1)
+
+
 @partial(jax.jit, static_argnames=("n_seeds", "cap", "C", "window",
                                    "pool_width", "fold_mates", "tail_scan"))
 def retrieve_for_users(index: LSHIndex, sp: SparseMatrix, user_ids: jax.Array,
@@ -187,40 +244,11 @@ def retrieve_for_users(index: LSHIndex, sp: SparseMatrix, user_ids: jax.Array,
       (measured ~9 ms vs ~8 ms at [256, 1552] → 768); the knob exists
       for accelerators where sort is relatively dearer.
     """
-    B = user_ids.shape[0]
-    seeds = seed_items(sp, user_ids, n_seeds=n_seeds, window=window)  # [B, S]
-
-    # an empty (or absent) tail means every seed id lives in the sorted
-    # core — lookup can take the slot-only fast path
-    base_only = (not tail_scan) or index.tail_cap == 0
-    mates = lookup_items(index, seeds.reshape(-1), cap=cap,
-                         include_tail=False, assume_base=base_only)
-    mates = mates.reshape(B, -1, cap)             # [B, S·q, cap] prefix runs
-    if fold_mates:
-        mates = _fold_prefix_runs(mates)
-    pools = [mates.reshape(B, -1), seeds]
-    if JK is not None:
-        safe = jnp.clip(seeds, 0, JK.shape[0] - 1)
-        nb = jnp.where((seeds != SENTINEL)[:, :, None], JK[safe], SENTINEL)
-        pools.append(nb.reshape(B, -1))
-    if index.tail_cap and tail_scan:
-        # one tail scan per *user*: tail items colliding with any seed/band
-        qsigs = _sig_of_items(index, seeds)                   # [q, B, S]
-        hit = jnp.any(qsigs[..., None] == index.tail_sigs[:, None, None, :],
-                      axis=(0, 2))                            # [B, T]
-        pools.append(jnp.where(hit, index.tail_ids[None, :], SENTINEL))
-
-    pool = jnp.concatenate(pools, axis=1)
-    if 0 < pool_width < pool.shape[1]:
-        pool = compact_pool(pool, width=pool_width)
-    if popular is None:
-        return dedup_candidates(pool, C=C)
-    # popularity shortlist gets reserved slots at the end of the row
-    P = popular.shape[0]
-    assert C > P, f"candidate budget C={C} must exceed the shortlist P={P}"
-    core = dedup_candidates(pool, C=C - P, exclude_sorted=jnp.sort(popular))
-    return jnp.concatenate(
-        [core, jnp.broadcast_to(popular[None, :], (B, P))], axis=1)
+    pool = candidate_pool(index, sp, user_ids, n_seeds=n_seeds, cap=cap,
+                          JK=JK, window=window, fold_mates=fold_mates,
+                          tail_scan=tail_scan)
+    return finalize_candidates(pool, C=C, popular=popular,
+                               pool_width=pool_width)
 
 
 @partial(jax.jit, static_argnames=("cap", "C"))

@@ -41,12 +41,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import model, simlsh
 from repro.core.model import Params
 from repro.data.sparse import SparseMatrix
 from repro.kernels.candidate_score.ops import score_candidates
 from repro.serve import index as lsh_index
-from repro.serve.retrieve import retrieve_for_users
+from repro.serve.retrieve import (candidate_pool, finalize_candidates,
+                                  retrieve_for_users)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,12 +116,16 @@ def recommend_candidates(planes: model.ServePlanes, index, sp, user_ids,
     retrieval/scoring boundary instead of holding two jit outputs live
     (the PR 1 layout donated nothing and kept `cand` alive between two
     dispatches)."""
-    cand = retrieve_for_users(index, sp, user_ids, n_seeds=n_seeds, cap=cap,
-                              C=C, JK=JK, popular=popular, window=window,
-                              pool_width=pool_width, fold_mates=fold_mates,
-                              tail_scan=tail_scan)
-    return score_candidates(planes, user_ids, cand, topn=topn, tile_b=tile_b,
-                            interpret=interpret, impl=impl)
+    # named_scope: the stage names below group the fused program's ops in
+    # XLA device profiles (the in-jit mirror of the host-side obs spans)
+    with jax.named_scope("serve.flush.retrieve"):
+        cand = retrieve_for_users(index, sp, user_ids, n_seeds=n_seeds,
+                                  cap=cap, C=C, JK=JK, popular=popular,
+                                  window=window, pool_width=pool_width,
+                                  fold_mates=fold_mates, tail_scan=tail_scan)
+    with jax.named_scope("serve.flush.score"):
+        return score_candidates(planes, user_ids, cand, topn=topn,
+                                tile_b=tile_b, interpret=interpret, impl=impl)
 
 
 def popular_shortlist(params: Params, n: int) -> jax.Array:
@@ -132,7 +138,8 @@ def popular_shortlist(params: Params, n: int) -> jax.Array:
 class RecsysService:
     def __init__(self, params: Params, index: lsh_index.LSHIndex,
                  sp: SparseMatrix, cfg: ServeConfig,
-                 JK: jax.Array | None = None):
+                 JK: jax.Array | None = None,
+                 registry: obs.Registry | None = None):
         self.params = params
         self.planes = model.pack_serve_planes(params)   # built once
         self.index = index
@@ -141,16 +148,24 @@ class RecsysService:
         self.JK = JK if cfg.use_jk else None
         self.popular = (popular_shortlist(params, cfg.n_popular)
                         if cfg.n_popular else None)
-        self._pending: collections.deque[np.ndarray] = collections.deque()
+        # all serving metrics live here (ISSUE 6: the registry is the
+        # single source of timing truth — stats() only reads it).  Always
+        # a PRIVATE registry: two services reading the same metric names
+        # ("serve.users", "serve.busy_seconds", the flush spans stats()
+        # turns into percentiles) must never blend — sharing the process
+        # registry made a full-mode service's traffic deflate a candidate
+        # service's reported QPS under --trace.  Completed spans still
+        # reach the process-wide timeline via the span mirror whenever
+        # the default registry is enabled.
+        self.obs = registry if registry is not None else obs.Registry(
+            enabled=True, mirror=obs.get())
+        # pending request chunks: (user_ids, t_submitted)
+        self._pending: collections.deque = collections.deque()
         self._n_pending = 0
-        # dispatched-but-unsynced flushes: (user_ids, n_real, t0, outputs)
+        # dispatched-but-unsynced flushes: (user_ids, n_real, t0_ns, outputs)
         self._inflight: collections.deque = collections.deque()
         self._results: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
-        self._flush_secs: list[float] = []
-        self._users_served = 0
-        self._dispatched = 0
-        self._busy_secs = 0.0
-        self._last_ready = 0.0
+        self._last_ready_ns = 0
 
     # ---- core pipelines (fixed [micro_batch] shapes → warm jit caches) ----
 
@@ -182,8 +197,9 @@ class RecsysService:
     def submit(self, user_ids) -> None:
         """Queue a request (any shape); flushes whole micro-batches."""
         arr = np.atleast_1d(np.asarray(user_ids, np.int32))
-        self._pending.append(arr)
+        self._pending.append((arr, time.perf_counter()))
         self._n_pending += arr.shape[0]
+        self.obs.gauge_set("serve.queue_depth", self._n_pending)
         while self._n_pending >= self.cfg.micro_batch:
             self._flush_one()
 
@@ -199,40 +215,50 @@ class RecsysService:
         """Dispatch one micro-batch; sync the *previous* flush only after
         this one is enqueued (double-buffered dispatch-ahead)."""
         mb = self.cfg.micro_batch
-        # consume only as many queued arrays as one micro-batch needs — a
-        # huge submit is sliced by view, not re-concatenated per flush
-        chunks, n = [], 0
-        while self._pending and n < mb:
-            a = self._pending.popleft()
-            chunks.append(a)
-            n += a.shape[0]
-        flat = (chunks[0] if len(chunks) == 1 else
-                np.concatenate(chunks) if chunks else np.zeros((0,), np.int32))
-        take = flat[:mb]
-        if flat.size > mb:
-            self._pending.appendleft(flat[mb:])
-        n_real = take.size
-        self._n_pending -= n_real
-        if n_real < mb:  # pad the final partial batch to the jitted shape
-            take = np.concatenate([take, np.zeros(mb - n_real, np.int32)])
+        reg = self.obs
+        with reg.span("serve.flush.dispatch"):
+            # consume only as many queued arrays as one micro-batch needs —
+            # a huge submit is sliced by view, not re-concatenated per flush
+            now = time.perf_counter()
+            chunks, n, t_last = [], 0, now
+            while self._pending and n < mb:
+                a, t_sub = self._pending.popleft()
+                reg.observe("serve.queue_wait", now - t_sub)
+                chunks.append(a)
+                n += a.shape[0]
+                t_last = t_sub
+            flat = (chunks[0] if len(chunks) == 1 else
+                    np.concatenate(chunks) if chunks else
+                    np.zeros((0,), np.int32))
+            take = flat[:mb]
+            if flat.size > mb:
+                # overflow comes entirely from the last chunk popped
+                self._pending.appendleft((flat[mb:], t_last))
+            n_real = take.size
+            self._n_pending -= n_real
+            reg.gauge_set("serve.queue_depth", self._n_pending)
+            if n_real < mb:  # pad the final partial batch to the jitted shape
+                take = np.concatenate([take, np.zeros(mb - n_real, np.int32)])
 
-        t0 = time.perf_counter()
-        out = self._recommend(jnp.asarray(take))      # async dispatch
-        self._inflight.append((take, n_real, t0, out))
-        self._dispatched += 1
+            t0_ns = time.perf_counter_ns()
+            out = self._recommend(jnp.asarray(take))      # async dispatch
+        self._inflight.append((take, n_real, t0_ns, out))
+        reg.counter_add("serve.flushes")
         while len(self._inflight) > 1:
             self._sync_oldest()
 
     def _sync_oldest(self) -> None:
-        take, n_real, t0, (scores, items) = self._inflight.popleft()
+        take, n_real, t0_ns, (scores, items) = self._inflight.popleft()
         jax.block_until_ready(items)
-        now = time.perf_counter()
+        now_ns = time.perf_counter_ns()
+        reg = self.obs
         # latency: dispatch → result readiness (includes time queued
         # behind the previous flush); busy wall: overlap counted once
-        self._flush_secs.append(now - t0)
-        self._busy_secs += now - max(self._last_ready, t0)
-        self._last_ready = now
-        self._users_served += n_real
+        reg.record_span("serve.flush", t0_ns, now_ns - t0_ns)
+        reg.counter_add("serve.busy_seconds",
+                        (now_ns - max(self._last_ready_ns, t0_ns)) * 1e-9)
+        self._last_ready_ns = now_ns
+        reg.counter_add("serve.users", n_real)
         self._results.append((take[:n_real],
                               np.asarray(scores)[:n_real],
                               np.asarray(items)[:n_real]))
@@ -247,17 +273,76 @@ class RecsysService:
         return out
 
     def stats(self) -> dict:
-        secs = np.asarray(self._flush_secs) if self._flush_secs else \
-            np.zeros((1,))
-        busy = self._busy_secs
+        """Serving stats, read *entirely* from the obs registry (ISSUE 6:
+        one source of timing truth).  Keys `mode/batches/users/qps/
+        p50_ms/p95_ms` keep their pre-obs semantics; `p99_ms`, `queue`
+        and `ingest_to_servable_s` (0.0 until the first ingest) are new."""
+        reg = self.obs
+        flush_s = reg.span_durations("serve.flush")
+        secs = np.asarray(flush_s) if flush_s else np.zeros((1,))
+        busy = reg.counter("serve.busy_seconds")
+        users = int(reg.counter("serve.users"))
         return dict(
             mode=self.cfg.mode,
-            batches=self._dispatched,
-            users=self._users_served,
-            qps=self._users_served / busy if busy else 0.0,
+            batches=int(reg.counter("serve.flushes")),
+            users=users,
+            qps=users / busy if busy else 0.0,
             p50_ms=float(np.percentile(secs, 50) * 1e3),
             p95_ms=float(np.percentile(secs, 95) * 1e3),
+            p99_ms=float(np.percentile(secs, 99) * 1e3),
+            queue=self._n_pending,
+            ingest_to_servable_s=reg.gauge("serve.ingest_to_servable_s", 0.0),
         )
+
+    def profile_flush(self, user_ids=None) -> dict:
+        """One *staged* flush with nested host spans — the observability
+        view of the hot path.
+
+        The production pipeline fuses retrieval and scoring into a single
+        jitted dispatch (host spans cannot subdivide it; only the
+        `jax.named_scope` stage names inside the program show up, and only
+        in XLA device profiles).  This path runs the same stages as
+        separate dispatches with a readiness barrier after each, so the
+        span tree  serve.flush → retrieve(.pool → .dedup) → score  carries
+        real wall times into the Chrome trace export.  Slower than the
+        fused path by the un-fused dispatch overhead — a profiling tool,
+        not a serving mode.  Returns {span name: seconds} for this run.
+        """
+        cfg = self.cfg
+        reg = self.obs
+        if user_ids is None:
+            user_ids = np.arange(cfg.micro_batch, dtype=np.int32)
+        ids = jnp.asarray(np.atleast_1d(np.asarray(user_ids, np.int32)))
+        names = ["serve.flush"]
+        with reg.span("serve.flush"):
+            if cfg.mode == "full":
+                with reg.span("serve.flush.score"):
+                    jax.block_until_ready(
+                        full_topn(self.params, ids, topn=cfg.topn))
+                names += ["serve.flush.score"]
+            else:
+                with reg.span("serve.flush.retrieve"):
+                    with reg.span("serve.flush.retrieve.pool"):
+                        pool = candidate_pool(
+                            self.index, self.sp, ids, n_seeds=cfg.n_seeds,
+                            cap=cfg.cap, JK=self.JK, window=cfg.seed_window,
+                            fold_mates=cfg.fold_mates,
+                            tail_scan=self.index.tail_fill > 0)
+                        jax.block_until_ready(pool)
+                    with reg.span("serve.flush.retrieve.dedup"):
+                        cand = finalize_candidates(
+                            pool, C=cfg.C, popular=self.popular,
+                            pool_width=cfg.resolved_pool_width())
+                        jax.block_until_ready(cand)
+                with reg.span("serve.flush.score"):
+                    jax.block_until_ready(score_candidates(
+                        self.planes, ids, cand, topn=cfg.topn,
+                        tile_b=cfg.tile_b, interpret=cfg.interpret_mode(),
+                        impl=cfg.scorer_impl()))
+                names += ["serve.flush.retrieve",
+                          "serve.flush.retrieve.pool",
+                          "serve.flush.retrieve.dedup", "serve.flush.score"]
+        return {n: reg.span_durations(n)[-1] for n in names}
 
     # ---- ingestion plane (paper Alg. 4) ----
 
@@ -270,16 +355,30 @@ class RecsysService:
         folding the tail away) flips the static tail fast path in
         `_recommend`, so re-warm here — the retrace lands in ingestion
         time, not in the next request's latency window."""
-        had_tail = self.index.tail_fill > 0
-        rebuilt = lsh_index.needs_rebuild(self.index, int(new_ids.shape[0]))
-        if rebuilt:     # a rebuild also grows n_base → new trace shapes
-            if full_sigs is None:
-                raise ValueError("tail overflow and no full_sigs to rebuild")
-            self.index = lsh_index.rebuild(self.index, full_sigs)
-        else:
-            self.index = lsh_index.insert(self.index, new_sigs, new_ids)
-        if rebuilt or (self.index.tail_fill > 0) != had_tail:
-            self.warmup()
+        t0_ns = time.perf_counter_ns()
+        with self.obs.span("serve.ingest"):
+            had_tail = self.index.tail_fill > 0
+            rebuilt = lsh_index.needs_rebuild(self.index,
+                                              int(new_ids.shape[0]))
+            if rebuilt:     # a rebuild also grows n_base → new trace shapes
+                if full_sigs is None:
+                    raise ValueError(
+                        "tail overflow and no full_sigs to rebuild")
+                with self.obs.span("serve.ingest.rebuild"):
+                    self.index = lsh_index.rebuild(self.index, full_sigs)
+            else:
+                with self.obs.span("serve.ingest.insert"):
+                    self.index = lsh_index.insert(self.index, new_sigs,
+                                                  new_ids)
+            if rebuilt or (self.index.tail_fill > 0) != had_tail:
+                with self.obs.span("serve.ingest.warmup"):
+                    self.warmup()
+        self.obs.counter_add("serve.ingests")
+        self.obs.counter_add("serve.ingested_items", int(new_ids.shape[0]))
+        # ingest→servable: new items are retrievable the moment ingest
+        # returns (and any forced retrace has already been re-warmed)
+        self.obs.gauge_set("serve.ingest_to_servable_s",
+                           (time.perf_counter_ns() - t0_ns) * 1e-9)
 
     def ingest_online_update(self, state, N_old: int) -> None:
         """Adopt a `core.online.online_update` result: swap in the grown
@@ -290,22 +389,33 @@ class RecsysService:
         The index is never rebuilt, but the grown parameter shapes force
         one retrace of the serving pipelines — re-warm here so the compile
         lands in ingestion time, not in a request's latency window."""
-        self.flush()        # drain in-flight work against the old planes
-        sigs = simlsh.pack_bits(state.S >= 0)                 # [q, N_new]
-        # swap the grown state in *before* the index ingest: ingest()'s
-        # own tail-boundary warmup must compile against the new plane
-        # shapes, not trace a pipeline the swap immediately invalidates
-        assert state.N <= 1 << 30, \
-            "item ids must stay below 2^30 (the dedup hash mask)"
-        self.params = state.params
-        self.planes = model.pack_serve_planes(state.params)
-        self.sp = state.sp
-        if self.JK is not None:
-            self.JK = state.JK
-        if self.cfg.n_popular:
-            self.popular = popular_shortlist(state.params, self.cfg.n_popular)
-        if state.N > N_old:
-            self.ingest(sigs[:, N_old:],
-                        jnp.arange(N_old, state.N, dtype=jnp.int32),
-                        full_sigs=sigs)
-        self.warmup()
+        t0_ns = time.perf_counter_ns()
+        with self.obs.span("serve.ingest_online"):
+            self.flush()    # drain in-flight work against the old planes
+            with self.obs.span("serve.ingest_online.resign"):
+                sigs = simlsh.pack_bits(state.S >= 0)         # [q, N_new]
+            # swap the grown state in *before* the index ingest: ingest()'s
+            # own tail-boundary warmup must compile against the new plane
+            # shapes, not trace a pipeline the swap immediately invalidates
+            assert state.N <= 1 << 30, \
+                "item ids must stay below 2^30 (the dedup hash mask)"
+            with self.obs.span("serve.ingest_online.swap"):
+                self.params = state.params
+                self.planes = model.pack_serve_planes(state.params)
+                self.sp = state.sp
+                if self.JK is not None:
+                    self.JK = state.JK
+                if self.cfg.n_popular:
+                    self.popular = popular_shortlist(state.params,
+                                                     self.cfg.n_popular)
+            if state.N > N_old:
+                self.ingest(sigs[:, N_old:],
+                            jnp.arange(N_old, state.N, dtype=jnp.int32),
+                            full_sigs=sigs)
+            with self.obs.span("serve.ingest_online.warmup"):
+                self.warmup()
+        # the full online handoff (drain → re-sign → swap → index →
+        # re-warm) is this path's ingest→servable latency; overwrites the
+        # inner ingest()'s narrower reading
+        self.obs.gauge_set("serve.ingest_to_servable_s",
+                           (time.perf_counter_ns() - t0_ns) * 1e-9)

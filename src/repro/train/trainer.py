@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import baselines as bl
 from repro.core import gsm, model, sgd, simlsh, topk
 from repro.data.sparse import SparseMatrix, conflict_free_schedule, from_coo
@@ -64,8 +65,10 @@ class FitConfig:
 class FitResult:
     params: model.Params
     JK: jax.Array | None
-    history: list            # [(epoch, seconds, rmse)] — seconds exclude
-                             # jit compilation (see compile_seconds)
+    history: list            # [(epoch, seconds, rmse)] — seconds are the
+                             # accumulated `train.epoch` span times from
+                             # the obs registry, excluding jit compilation
+                             # (see compile_seconds)
     neighbour_seconds: float
     S: jax.Array | None = None  # simLSH accumulators (online cache)
     hash_key: jax.Array | None = None  # key S was encoded with (Alg. 4 needs
@@ -73,6 +76,8 @@ class FitResult:
     compile_seconds: float = 0.0  # AOT epoch-fn compile (one-off)
     prep_seconds: float = 0.0     # gather cache + conflict-free schedule
     schedule_stats: dict | None = None
+    registry: obs.Registry | None = None  # the registry every timing above
+                                          # was read from (ISSUE 6)
 
 
 def build_neighbours(sp: SparseMatrix, cfg: FitConfig, key):
@@ -102,13 +107,23 @@ def build_neighbours(sp: SparseMatrix, cfg: FitConfig, key):
 
 
 def fit(train_coo, test_coo, shape, cfg: FitConfig,
-        log: Callable[[str], None] | None = None) -> FitResult:
+        log: Callable[[str], None] | None = None,
+        registry: obs.Registry | None = None) -> FitResult:
+    # all fit timings live in one obs registry (ISSUE 6) — the shared
+    # process registry when enabled (so train spans land on the unified
+    # timeline next to serve/online ones), else a private enabled one so
+    # FitResult timing always works.  Every FitResult timing field below
+    # is *read back* from the registry's spans, never from a second
+    # stopwatch.
+    reg = registry if registry is not None else obs.scoped()
     key = jax.random.PRNGKey(cfg.seed)
     k_nb, k_init, k_ep = jax.random.split(key, 3)
     sp = from_coo(*train_coo, shape)
     te_r, te_c, te_v = (jnp.asarray(a) for a in test_coo)
 
-    JK, nb_secs, S, k_sig = build_neighbours(sp, cfg, k_nb)
+    with reg.span("train.neighbours"):
+        JK, _, S, k_sig = build_neighbours(sp, cfg, k_nb)
+    nb_secs = reg.span_durations("train.neighbours")[-1]
     mf_only = cfg.method == "none"
     if JK is None:  # plain MF still needs a JK placeholder for batch assembly
         JK = jnp.zeros((sp.N, cfg.K), jnp.int32)
@@ -142,18 +157,24 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
     ec = None
     shd = None
     if scheduled:
-        t0 = time.perf_counter()
-        sched = conflict_free_schedule(
-            np.asarray(sp.rows), np.asarray(sp.cols),
-            batch=min(cfg.cf_batch, cfg.batch), tiers=cfg.tiers,
-            tier_shrink=cfg.tier_shrink, min_fill_frac=cfg.min_fill_frac,
-            shards=shards, M=sp.M, N=sp.N, seed=cfg.seed)
-        sd = model.build_scheduled_data(sp, JK, sched, mf_only=mf_only)
-        shd = model.build_shard_data(sp, JK, sched, mf_only=mf_only)
-        if cfg.eval_every:
-            ec = model.build_eval_cache(sp, JK, te_r, te_c, mf_only=mf_only)
-        jax.block_until_ready(sd.r)
-        prep_secs = time.perf_counter() - t0
+        with reg.span("train.prep"):
+            with reg.span("train.prep.schedule"):
+                sched = conflict_free_schedule(
+                    np.asarray(sp.rows), np.asarray(sp.cols),
+                    batch=min(cfg.cf_batch, cfg.batch), tiers=cfg.tiers,
+                    tier_shrink=cfg.tier_shrink,
+                    min_fill_frac=cfg.min_fill_frac,
+                    shards=shards, M=sp.M, N=sp.N, seed=cfg.seed)
+            with reg.span("train.prep.pack"):
+                sd = model.build_scheduled_data(sp, JK, sched,
+                                                mf_only=mf_only)
+                shd = model.build_shard_data(sp, JK, sched, mf_only=mf_only)
+            if cfg.eval_every:
+                with reg.span("train.prep.eval_cache"):
+                    ec = model.build_eval_cache(sp, JK, te_r, te_c,
+                                                mf_only=mf_only)
+            jax.block_until_ready(sd.r)
+        prep_secs = reg.span_durations("train.prep")[-1]
         sched_stats = dict(
             sched.stats(), prep_sec=prep_secs,
             prep_per_epoch=prep_secs / max(cfg.epochs - start_epoch, 1))
@@ -170,54 +191,61 @@ def fit(train_coo, test_coo, shape, cfg: FitConfig,
     interpret = jax.default_backend() == "cpu"
 
     # AOT-compile the epoch fn so jit compilation is charged to
-    # compile_seconds, never to history / benchmark training time
-    t0 = time.perf_counter()
-    ep0 = jnp.asarray(start_epoch)
-    k0 = jax.random.fold_in(k_ep, start_epoch)
-    if scheduled:
-        # training state: block-padded id space (shard schedules relay
-        # every id through sched.row_map/col_map) + the two packed planes;
-        # unpacked original-id Params only at the eval/ckpt/result boundary
-        state = model.pack_params(model.remap_params(params, sched))
-        to_public = lambda q: model.unmap_params(model.unpack_params(q),
-                                                 sched)
-        epoch_fn = sgd.train_epoch_scheduled.lower(
-            state, sd, sched, k0, ep0, cfg.hp, shd=shd, mf_only=mf_only,
-            bce=bce, use_kernels=cfg.use_kernels, impl=impl,
-            interpret=interpret, mesh=mesh).compile()
-        run = lambda qq, kk, ee: epoch_fn(qq, sd, sched, kk, ee, cfg.hp,
-                                          shd=shd)
-    else:
-        state = params
-        to_public = lambda q: q
-        epoch_fn = sgd.train_epoch.lower(
-            state, sp, JK, k0, ep0, cfg.hp, batch=cfg.batch,
-            mf_only=mf_only, bce=bce).compile()
-        run = lambda qq, kk, ee: epoch_fn(qq, sp, JK, kk, ee, cfg.hp)
-    compile_secs = time.perf_counter() - t0
+    # compile_seconds, never to history / benchmark training time — the
+    # `train.compile` span keeps the compile/steady-state separation
+    # visible in the trace, too
+    with reg.span("train.compile"):
+        ep0 = jnp.asarray(start_epoch)
+        k0 = jax.random.fold_in(k_ep, start_epoch)
+        if scheduled:
+            # training state: block-padded id space (shard schedules relay
+            # every id through sched.row_map/col_map) + the two packed
+            # planes; unpacked original-id Params only at the
+            # eval/ckpt/result boundary
+            state = model.pack_params(model.remap_params(params, sched))
+            to_public = lambda q: model.unmap_params(model.unpack_params(q),
+                                                     sched)
+            epoch_fn = sgd.train_epoch_scheduled.lower(
+                state, sd, sched, k0, ep0, cfg.hp, shd=shd, mf_only=mf_only,
+                bce=bce, use_kernels=cfg.use_kernels, impl=impl,
+                interpret=interpret, mesh=mesh).compile()
+            run = lambda qq, kk, ee: epoch_fn(qq, sd, sched, kk, ee, cfg.hp,
+                                              shd=shd)
+        else:
+            state = params
+            to_public = lambda q: q
+            epoch_fn = sgd.train_epoch.lower(
+                state, sp, JK, k0, ep0, cfg.hp, batch=cfg.batch,
+                mf_only=mf_only, bce=bce).compile()
+            run = lambda qq, kk, ee: epoch_fn(qq, sp, JK, kk, ee, cfg.hp)
+    compile_secs = reg.span_durations("train.compile")[-1]
 
     history = []
     t_train = 0.0
     for ep in range(start_epoch, cfg.epochs):
-        t0 = time.perf_counter()
-        state = run(state, jax.random.fold_in(k_ep, ep), jnp.asarray(ep))
-        jax.block_until_ready(jax.tree.leaves(state)[0])
-        t_train += time.perf_counter() - t0
+        with reg.span("train.epoch"):
+            state = run(state, jax.random.fold_in(k_ep, ep), jnp.asarray(ep))
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+        t_train += reg.span_durations("train.epoch")[-1]
+        reg.counter_add("train.epochs")
         if cfg.eval_every and (ep + 1) % cfg.eval_every == 0:
-            p_eval = to_public(state)
-            if ec is not None:   # per-epoch eval is a cached gather scan
-                r = float(model.rmse_cached(p_eval, ec, te_r, te_c, te_v,
-                                            mf_only=mf_only))
-            else:
-                r = float(model.rmse(p_eval, sp, JK, te_r, te_c, te_v,
-                                     mf_only=mf_only))
+            with reg.span("train.epoch.eval"):
+                p_eval = to_public(state)
+                if ec is not None:  # per-epoch eval is a cached gather scan
+                    r = float(model.rmse_cached(p_eval, ec, te_r, te_c, te_v,
+                                                mf_only=mf_only))
+                else:
+                    r = float(model.rmse(p_eval, sp, JK, te_r, te_c, te_v,
+                                         mf_only=mf_only))
             history.append((ep, t_train, r))
+            reg.event("train.eval", epoch=ep, t_train=t_train, rmse=r)
             if log:
                 log(f"epoch {ep:3d}  t={t_train:7.2f}s  rmse={r:.4f}")
         if cfg.ckpt_dir and cfg.ckpt_every and (ep + 1) % cfg.ckpt_every == 0:
-            ckpt.save(cfg.ckpt_dir, to_public(state), step=ep + 1)
+            with reg.span("train.ckpt"):
+                ckpt.save(cfg.ckpt_dir, to_public(state), step=ep + 1)
 
     params = to_public(state)
     return FitResult(params, JK, history, nb_secs, S, hash_key=k_sig,
                      compile_seconds=compile_secs, prep_seconds=prep_secs,
-                     schedule_stats=sched_stats)
+                     schedule_stats=sched_stats, registry=reg)

@@ -21,8 +21,18 @@ def _run(name, timeout=900):
     assert f"PASS {name}" in r.stdout
 
 
-@pytest.mark.parametrize("check", ["rotation", "moe_a2a", "moe_ep2d",
-                                   "compression", "elastic",
-                                   "small_dryrun", "sharded_epoch"])
+# rotation/compression import `repro.dist.{rotation,compression}`, a module
+# the seed commit references but never shipped — xfail until someone either
+# recovers/rewrites it or deletes the checks (tracked in ARCHITECTURE.md §9).
+_MISSING_DIST = pytest.mark.xfail(
+    reason="seed-vestigial: repro.dist module missing from the seed commit",
+    strict=True)
+
+
+@pytest.mark.parametrize("check", [
+    pytest.param("rotation", marks=_MISSING_DIST),
+    "moe_a2a", "moe_ep2d",
+    pytest.param("compression", marks=_MISSING_DIST),
+    "elastic", "small_dryrun", "sharded_epoch"])
 def test_multidevice(check):
     _run(check)

@@ -1,0 +1,202 @@
+"""Bench-artifact gate: validate BENCH_*.json documents against the
+schema the rest of the repo (CI, docs, PR claims) relies on.
+
+The two benchmarks write structured JSON (``bench_train.py`` →
+BENCH_train.json, ``bench_serve.py`` → BENCH_serve.json).  Their shape is
+a contract: `--check` floors read them, docs/ARCHITECTURE.md cites them,
+and cross-PR speedup claims diff them.  This tool fails fast when a
+refactor silently drops or renames a field, so a bench JSON that CI
+archives is always a complete one.
+
+Checks per document (dependency-free, stdlib json only):
+
+  * top-level metadata: ``benchmark``, ``backend``, ``jax_version`` and a
+    ``protocol`` dict that records the timing methodology and the
+    ``floors`` the --check gate enforces (a floor that isn't recorded
+    next to the numbers it gates is a floor nobody can audit);
+  * per-entry requireds — every ``scales[]`` entry (train) must carry the
+    base/sched/kernel timing blocks, schedule stats and the obs-overhead
+    section; every ``sizes[]`` entry (serve) the full/cand QPS blocks,
+    recall, the staged breakdown and the obs-overhead section;
+  * type/range sanity: timings positive and finite, recall in [0, 1],
+    counters non-negative — a NaN that sneaks into a JSON would otherwise
+    pass every `>=` floor (NaN comparisons are False, so `--check`
+    style gates silently approve it);
+  * ``pr1_same_window`` (serve, optional): when present, every size entry
+    must carry the re-measured baseline QPS fields — a same-window claim
+    without numbers is not a claim.
+
+Exit non-zero listing every violation.  Run as (CI does, right after the
+smoke benches):
+
+    python tools/check_bench.py BENCH_train.json BENCH_serve.json
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+
+def _num(doc, path, lo=None, hi=None, errs=None):
+    """Fetch a dotted path; record an error if missing/non-finite/out of
+    range.  Returns the value (or None)."""
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            errs.append(f"missing field: {path}")
+            return None
+        cur = cur[part]
+    if isinstance(cur, bool) or not isinstance(cur, (int, float)):
+        errs.append(f"{path}: expected number, got {type(cur).__name__}")
+        return None
+    if isinstance(cur, float) and not math.isfinite(cur):
+        errs.append(f"{path}: non-finite value {cur}")
+        return None
+    if lo is not None and cur < lo:
+        errs.append(f"{path}: {cur} < {lo}")
+    if hi is not None and cur > hi:
+        errs.append(f"{path}: {cur} > {hi}")
+    return cur
+
+
+def _meta(doc, name, errs):
+    for f in ("benchmark", "backend", "jax_version"):
+        if not isinstance(doc.get(f), str) or not doc.get(f):
+            errs.append(f"missing/empty metadata: {f}")
+    if doc.get("benchmark") != name:
+        errs.append(f"benchmark field is {doc.get('benchmark')!r}, "
+                    f"expected {name!r}")
+    proto = doc.get("protocol")
+    if not isinstance(proto, dict):
+        errs.append("missing protocol dict")
+    else:
+        if not isinstance(proto.get("timing"), str):
+            errs.append("protocol.timing missing (methodology must be "
+                        "recorded next to the numbers)")
+        floors = proto.get("floors")
+        if not isinstance(floors, dict) or not floors:
+            errs.append("protocol.floors missing (the --check floors must "
+                        "be recorded in the artifact they gate)")
+        else:
+            for k, v in floors.items():
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    errs.append(f"protocol.floors.{k}: not a number")
+
+
+def _obs_overhead(entry, prefix, errs, *, time_like):
+    ov = entry.get("obs_overhead")
+    if not isinstance(ov, dict):
+        errs.append(f"{prefix}: missing obs_overhead section (ISSUE 6: "
+                    f"the instrumentation-cost measurement ships with "
+                    f"every bench run)")
+        return
+    keys = (("enabled_sec_per_epoch", "disabled_sec_per_epoch")
+            if time_like else ("enabled_qps", "disabled_qps"))
+    for k in keys:
+        _num(ov, k, lo=0.0, errs=errs)
+    # the overhead itself is noise-bounded, not floor-gated: assert only
+    # that it was measured and is sane (|frac| < 0.5 catches a broken
+    # measurement, not an unlucky container window)
+    f = _num(ov, "overhead_frac", errs=errs)
+    if f is not None and abs(f) > 0.5:
+        errs.append(f"{prefix}: obs_overhead.overhead_frac {f:+.3f} "
+                    f"implausible (broken measurement?)")
+
+
+def check_train(doc) -> list:
+    errs: list = []
+    _meta(doc, "bench_train", errs)
+    scales = doc.get("scales")
+    if not isinstance(scales, list) or not scales:
+        return errs + ["scales: missing or empty"]
+    for e in scales:
+        p = f"scales[{e.get('name', '?')}]"
+        for f in ("name",):
+            if not isinstance(e.get(f), str):
+                errs.append(f"{p}: missing {f}")
+        for f in ("M", "N", "nnz", "epochs"):
+            _num(e, f, lo=1, errs=errs)
+        for path_ in ("base", "sched", "kernel"):
+            for f in ("sec_per_epoch", "updates_per_sec", "compile_sec",
+                      "rmse"):
+                _num(e, f"{path_}.{f}", lo=0.0, errs=errs)
+        _num(e, "schedule.cf_frac", lo=0.0, hi=1.0, errs=errs)
+        _num(e, "schedule.prep_sec", lo=0.0, errs=errs)
+        _num(e, "speedup_sched", lo=0.0, errs=errs)
+        _num(e, "speedup_kernel", lo=0.0, errs=errs)
+        _obs_overhead(e, p, errs, time_like=True)
+    return errs
+
+
+def check_serve(doc) -> list:
+    errs: list = []
+    _meta(doc, "bench_serve", errs)
+    sizes = doc.get("sizes")
+    if not isinstance(sizes, list) or not sizes:
+        return errs + ["sizes: missing or empty"]
+    for e in sizes:
+        p = f"sizes[N={e.get('N', '?')}]"
+        for f in ("N", "M", "nnz", "topn", "batch", "C"):
+            _num(e, f, lo=1, errs=errs)
+        for mode in ("full", "cand"):
+            for f in ("qps", "p50_ms", "p95_ms", "batches"):
+                _num(e, f"{mode}.{f}", lo=0.0, errs=errs)
+        _num(e, "qps_ratio", lo=0.0, errs=errs)
+        _num(e, "recall", lo=0.0, hi=1.0, errs=errs)
+        for f in ("retrieve_ms", "score_ms", "pool_ms", "dedup_ms",
+                  "flush_ms"):
+            _num(e, f"breakdown.{f}", lo=0.0, errs=errs)
+        if not isinstance(e.get("scorer_hlo_cube_free"), bool):
+            errs.append(f"{p}: scorer_hlo_cube_free missing/not bool")
+        _obs_overhead(e, p, errs, time_like=False)
+    pr1 = doc.get("pr1_same_window")
+    if pr1 is not None:
+        if not isinstance(pr1, dict):
+            errs.append("pr1_same_window: not a dict")
+        else:
+            for k, v in pr1.items():
+                if not isinstance(v, dict):
+                    continue    # metadata (baseline commit)
+                for f in ("full_qps", "cand_qps", "recall"):
+                    _num(v, f, lo=0.0, errs=errs)
+    return errs
+
+
+CHECKERS = {"bench_train": check_train, "bench_serve": check_serve}
+
+
+def check_file(path: str) -> list:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable: {e}"]
+    if not isinstance(doc, dict):
+        return ["top level is not an object"]
+    checker = CHECKERS.get(doc.get("benchmark"))
+    if checker is None:
+        return [f"unknown benchmark field {doc.get('benchmark')!r} "
+                f"(expected one of {sorted(CHECKERS)})"]
+    return checker(doc)
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:])
+    if not paths:
+        print("usage: check_bench.py BENCH_train.json [BENCH_serve.json ...]",
+              file=sys.stderr)
+        return 2
+    bad = 0
+    for path in paths:
+        errs = check_file(path)
+        for e in errs:
+            print(f"SCHEMA FAIL {path}: {e}", file=sys.stderr)
+        bad += bool(errs)
+        if not errs:
+            print(f"# {path}: schema OK")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
