@@ -14,6 +14,15 @@ and records everything in ``BENCH_serve.json`` (see --out), including a
 programmatic check that the scorer's lowered HLO contains no B×C×F
 candidate cube (the ISSUE 5 acceptance criterion).
 
+Every run also executes the **fault-scenario arm** (`fault_scenario`,
+recorded under ``fault_scenario``): zipf-drift traffic with overload
+bursts, a cold-start item burst that overflows the index tail, and a
+deterministically injected rebuild failure + flush failure via
+`repro.resil.faults`.  Gated floors (--check): the service must shed
+rather than stall (shed_rate > 0, p99 flush latency within 2× of the
+fault-free arm), keep its recall floor while the index is stale, and
+recover by retrying the rebuild (ISSUE 7 acceptance).
+
 The catalog is *planted*: items and users are partitioned into preference
 groups, every item is rated by users of its own group, and factors point
 along the group direction.  This is the regime the paper's LSH bucketing
@@ -52,10 +61,18 @@ from repro import obs
 from repro.core import simlsh, topk
 from repro.core.model import Params, pack_serve_planes
 from repro.data.sparse import from_coo
+from repro.resil import FaultSpec, faults
 from repro.serve import (RecsysService, ServeConfig, build_index, full_topn)
 
 CHECK_QPS_RATIO = 2.0    # candidate path must stay ≥ 2× full scoring
 CHECK_RECALL = 0.85      # recall@topn floor vs the exact top-N
+# fault-scenario floors (ISSUE 7): under injected faults the service must
+# shed rather than stall (p99 within 2× of the fault-free arm, nonzero
+# shed rate), keep answering accurately, and actually recover
+CHECK_FAULT_P99_RATIO = 2.0
+CHECK_FAULT_RECALL = 0.80
+FAULT_N = 20_000         # scenario catalog size (fixed: it's a scenario,
+                         # not a scaling study)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,6 +271,125 @@ def bench_size(N: int, *, batch: int, full_batches: int, cand_batches: int,
         full_qps=st_full["qps"], cand_qps=st_cand["qps"])
 
 
+def drift_stream(rng, M: int, batch: int, n_batches: int, *,
+                 burst_every: int = 0, burst_mult: int = 3):
+    """Zipf(1.3) popularity traffic whose hot set drifts — the user
+    permutation rolls every 3 batches, so the head of the distribution
+    moves over the catalog like a trending cycle.  When ``burst_every``
+    is set, every burst_every-th batch is a ``burst_mult``× wave
+    submitted as one request (the overload spike the admission bound
+    sheds against)."""
+    perm = rng.permutation(M)
+    for i in range(n_batches):
+        if i and i % 3 == 0:
+            perm = np.roll(perm, M // 7)
+        burst = burst_every and i % burst_every == burst_every - 1
+        n = batch * (burst_mult if burst else 1)
+        z = np.minimum(rng.zipf(1.3, n).astype(np.int64) - 1, M - 1)
+        yield perm[z].astype(np.int32)
+
+
+def fault_scenario(*, batch: int, topn: int, probe: int, seed: int = 0):
+    """ISSUE 7 fault arm: zipf-drift traffic + a cold-start item burst
+    that overflows the index tail + a deterministically injected rebuild
+    failure (and one injected flush failure), against a fault-free arm
+    with the same drifting traffic.  Measures
+
+      * ``shed_rate``          — overload users answered degraded / total,
+      * ``recall_under_fault`` — recall@topn while the index is stale
+                                 (serving v, v+1 build failing/retrying),
+      * ``recover_seconds``    — overflow ingest → validated v+1 swapped
+                                 in and re-warmed (includes the retry),
+      * ``p99_ratio``          — fault-arm p99 flush latency / fault-free
+                                 (sheds must keep the pipeline p99 flat).
+
+    The catalog is planted at FAULT_N items but the index is built over
+    all-but-96 of them; those 96 arrive as the cold-start burst, so the
+    exact scorer (and recall reference) always sees the full catalog."""
+    N, n_new, tail_cap = FAULT_N, 96, 64
+    t0 = time.perf_counter()
+    spec = CatalogSpec(N=N)
+    params, sp, _ = make_catalog(spec, seed=seed)
+    M = params.U.shape[0]
+    lsh = simlsh.SimLSHConfig(G=8, p=2, q=10, band_cap=16)
+    key = jax.random.PRNGKey(seed)
+    sigs = simlsh.encode(sp, lsh, key)
+    JK = topk.topk_from_signatures(sigs, jax.random.fold_in(key, 1), K=16,
+                                   band_cap=lsh.band_cap)
+    N0 = N - n_new     # the last n_new items arrive as the cold-start burst
+    index = build_index(sigs[:, :N0], tail_cap=tail_cap)
+    jax.block_until_ready(index.sorted_sigs)
+    emit(f"serve.fault.setup.N{N}", time.perf_counter() - t0, f"M={M}")
+
+    cfg = ServeConfig(topn=topn, micro_batch=batch, C=512, n_seeds=16,
+                      cap=8, n_popular=64, tile_b=16,
+                      max_pending=2 * batch, deadline_s=0.5)
+    rng = np.random.default_rng(seed + 2)
+    probe_users = jnp.asarray(rng.integers(0, M, probe), jnp.int32)
+
+    # fault-free arm: same drifting traffic, no bursts, no injections
+    base = RecsysService(params, index, sp, cfg, JK=JK)
+    st_base = run_mode(base, drift_stream(rng, M, batch, 12), batch)
+    recall_base = recall_at(base, params, probe_users, topn)
+
+    # fault arm: rebuild attempt 0 fails (retry must recover), one flush
+    # dispatch fails (exact-scoring fallback), overload bursts shed
+    svc = RecsysService(params, index, sp, cfg, JK=JK)
+    svc.warmup()
+    recover_s = None
+    with faults.injected({
+            "serve.rebuild": FaultSpec(kind="exc", at_calls=(0,)),
+            "serve.flush": FaultSpec(kind="exc", at_calls=(3,)),
+    }, seed=seed):
+        t_fault = time.perf_counter()
+        svc.ingest(sigs[:, N0:], jnp.arange(N0, N, dtype=jnp.int32),
+                   full_sigs=sigs)
+        # recall while the index is stale: v keeps serving, v+1 failing
+        recall_stale = recall_at(svc, params, probe_users, topn)
+        for users in drift_stream(rng, M, batch, 12, burst_every=4):
+            svc.submit(users)
+            if recover_s is None and svc.index.n_base == N:
+                recover_s = time.perf_counter() - t_fault
+        svc.flush()
+        give_up = time.perf_counter() + 120.0
+        while recover_s is None and time.perf_counter() < give_up:
+            time.sleep(0.05)
+            svc.flush()                   # polls the background rebuilder
+            if svc.index.n_base == N:
+                recover_s = time.perf_counter() - t_fault
+    recall_after = recall_at(svc, params, probe_users, topn)
+    st = svc.stats()
+
+    shed_rate = st["shed"] / max(st["users"], 1)
+    p99_ratio = st["p99_ms"] / max(st_base["p99_ms"], 1e-9)
+    out = dict(
+        N=N, n_new=n_new, tail_cap=tail_cap, batch=batch, topn=topn,
+        traffic="zipf(1.3), hot set drifts every 3 batches, 3x overload "
+                "burst every 4th batch",
+        fault_plan=["serve.rebuild exc@call0", "serve.flush exc@call3"],
+        shed_rate=float(shed_rate), shed_users=st["shed"],
+        degraded_users=st["degraded"], dropped_users=st["dropped"],
+        fallbacks=st["fallbacks"],
+        rebuild_retries=int(svc.obs.counter("serve.rebuild.retries")),
+        recovered=recover_s is not None,
+        recover_seconds=float(recover_s) if recover_s is not None else -1.0,
+        recall_fault_free=float(recall_base),
+        recall_under_fault=float(recall_stale),
+        recall_after_recover=float(recall_after),
+        p99_fault_free_ms=st_base["p99_ms"], p99_under_fault_ms=st["p99_ms"],
+        p99_ratio=float(p99_ratio),
+        qps_fault_free=st_base["qps"], qps_under_fault=st["qps"])
+    emit("serve.fault.recover_seconds", out["recover_seconds"],
+         f"retries={out['rebuild_retries']}")
+    emit("serve.fault.shed_rate", shed_rate,
+         f"shed={st['shed']};degraded={st['degraded']}")
+    emit("serve.fault.p99_ratio", p99_ratio,
+         f"fault={st['p99_ms']:.1f}ms;free={st_base['p99_ms']:.1f}ms")
+    emit("serve.fault.recall", recall_stale,
+         f"free={recall_base:.3f};after={recall_after:.3f}")
+    return out
+
+
 def run_pr1_same_window(pr1_dir: str, argv: list[str]):
     """Run the pre-overhaul bench_serve from a worktree *in this same
     measurement window* and return its results (benchmarks/README.md:
@@ -293,6 +429,27 @@ def check(results: list[dict]) -> list[str]:
         if not r["scorer_hlo_cube_free"]:
             fails.append(f"N={r['N']}: B×C×F candidate cube is back in the "
                          f"scorer HLO")
+    return fails
+
+
+def check_fault(fs: dict) -> list[str]:
+    """Fault-scenario floors: shed instead of stall (nonzero shed rate,
+    p99 within 2× of the fault-free arm), never serve junk (recall floor
+    holds while the index is stale), and actually recover (the injected
+    rebuild failure is retried and the validated v+1 swaps in)."""
+    fails = []
+    if not fs["recovered"]:
+        fails.append("fault: index never recovered from the injected "
+                     "rebuild failure")
+    if fs["shed_rate"] <= 0.0:
+        fails.append("fault: overload bursts shed nothing (admission "
+                     "bound not exercised)")
+    if fs["p99_ratio"] > CHECK_FAULT_P99_RATIO:
+        fails.append(f"fault: p99 flush latency ratio {fs['p99_ratio']:.2f}"
+                     f" > {CHECK_FAULT_P99_RATIO} (stalling, not shedding)")
+    if fs["recall_under_fault"] < CHECK_FAULT_RECALL:
+        fails.append(f"fault: recall under fault "
+                     f"{fs['recall_under_fault']:.3f} < {CHECK_FAULT_RECALL}")
     return fails
 
 
@@ -358,6 +515,8 @@ def main(argv=None):
             N, batch=args.batch, full_batches=args.full_batches,
             cand_batches=args.cand_batches, probe=args.probe,
             topn=args.topn, seed=args.seed, **kw))
+    fault = fault_scenario(batch=args.batch, topn=args.topn,
+                           probe=args.probe, seed=args.seed)
 
     doc = dict(
         benchmark="bench_serve",
@@ -372,8 +531,11 @@ def main(argv=None):
                    "over 5 repeats; obs_overhead = disabled/enabled median-"
                    "QPS ratio - 1 over interleaved order-swapped repeats "
                    "(target ≤0.02)",
-            floors=dict(qps_ratio=CHECK_QPS_RATIO, recall=CHECK_RECALL)),
+            floors=dict(qps_ratio=CHECK_QPS_RATIO, recall=CHECK_RECALL,
+                        fault_p99_ratio=CHECK_FAULT_P99_RATIO,
+                        fault_recall=CHECK_FAULT_RECALL)),
         sizes=results,
+        fault_scenario=fault,
     )
     if args.pr1:
         pr1_argv = ["--sizes", ",".join(str(r["N"]) for r in results),
@@ -397,6 +559,11 @@ def main(argv=None):
               f"{r['breakdown']['retrieve_ms']:.0f} ms + score "
               f"{r['breakdown']['score_ms']:.0f} ms / flush | obs "
               f"{r['obs_overhead']['overhead_frac']:+.3f}")
+    print(f"# fault N={fault['N']}: shed_rate {fault['shed_rate']:.3f} | "
+          f"recall under fault {fault['recall_under_fault']:.3f} (free "
+          f"{fault['recall_fault_free']:.3f}) | recover "
+          f"{fault['recover_seconds']:.1f}s ({fault['rebuild_retries']} "
+          f"retries) | p99 ratio {fault['p99_ratio']:.2f}")
     if args.pr1:
         for k, v in doc["pr1_same_window"].items():
             if not isinstance(v, dict):       # metadata (baseline commit)
@@ -405,14 +572,16 @@ def main(argv=None):
                   f"cand {v['cand_qps']:,.0f} qps | recall {v['recall']:.3f}")
 
     if args.check:
-        fails = check(results)
+        fails = check(results) + check_fault(fault)
         for f_ in fails:
             print(f"CHECK FAIL: {f_}", file=sys.stderr)
         if fails:
             sys.exit(1)
         print(f"# check passed: qps_ratio ≥ {CHECK_QPS_RATIO}, recall ≥ "
               f"{CHECK_RECALL}, cube-free HLO on "
-              f"{','.join(str(r['N']) for r in results)}")
+              f"{','.join(str(r['N']) for r in results)}; fault arm "
+              f"recovered with shed_rate > 0, p99 ratio ≤ "
+              f"{CHECK_FAULT_P99_RATIO}, recall ≥ {CHECK_FAULT_RECALL}")
     return results
 
 

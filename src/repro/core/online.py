@@ -31,6 +31,10 @@ from repro.core import simlsh, topk
 from repro.core.model import Params, assemble
 from repro.core.sgd import Hyper, culsh_step, lr_decay
 from repro.data.sparse import SparseMatrix, epoch_batches, from_coo, merge_coo
+# direct submodule imports — repro.resil's package __init__ pulls in the WAL
+# machinery, which imports back into repro.core
+from repro.resil.guard import DivergenceError, GuardConfig, check_divergence
+from repro.resil.validate import check_delta
 
 
 @dataclasses.dataclass
@@ -93,18 +97,30 @@ def online_update(st: OnlineState, new_rows, new_cols, new_vals,
                   cfg: simlsh.SimLSHConfig, hp: Hyper, key, *,
                   M_new: int, N_new: int, K: int, epochs: int = 3,
                   batch: int = 4096,
+                  guard: GuardConfig | None = GuardConfig(),
                   registry: obs.Registry | None = None) -> OnlineState:
     """Alg. 4 end-to-end.  ``new_*`` are ΔΩ triples in the grown id space.
 
     Stage timings (re-sign/merge/topk/train) are recorded as nested obs
     spans under ``online.update``; `OnlineState.stats` reads them back
     from the registry (ISSUE 6 — no second stopwatch), and the ΔΩ sizes
-    land in the registry's event log for JSONL time-series export."""
+    land in the registry's event log for JSONL time-series export.
+
+    Resilience (ISSUE 7): the ΔΩ triples are validated at the boundary —
+    a poison batch (NaN values, negative or out-of-range ids, shrinking
+    M/N) raises `PoisonBatchError` before any state is touched.  After
+    training, ``guard`` runs a divergence watchdog over the newly trained
+    parameter slices; a trip raises `DivergenceError` *before* the new
+    state is constructed, so the caller's ``st`` is the rollback."""
     if st.hash_key is None:
         raise ValueError(
             "OnlineState.hash_key is unset — pass the key the accumulators "
             "were encoded with (FitResult.hash_key), else ΔΩ is hashed with "
             "a different Φ family and incremental signatures are garbage")
+    # poison quarantine at the boundary — raises PoisonBatchError; nothing
+    # downstream (accumulators, merged Ω̂, params) sees a bad batch
+    check_delta(new_rows, new_cols, new_vals,
+                M_new=M_new, N_new=N_new, M_old=st.M, N_old=st.N)
     reg = registry if registry is not None else obs.scoped()
     k_grow, k_topk, k_train = jax.random.split(key, 3)
 
@@ -155,6 +171,17 @@ def online_update(st: OnlineState, new_rows, new_cols, new_vals,
 
                 p, _ = jax.lax.scan(body, p, (idx, valid))
             jax.block_until_ready(p.U)
+
+        # divergence watchdog: inspect the trained slices before building
+        # the new state — on a trip the caller keeps `st` (the snapshot)
+        if guard is not None:
+            probs = check_divergence(p, st.params, M_old=st.M, N_old=st.N,
+                                     cfg=guard)
+            if probs:
+                reg.counter_add("online.guard_trips")
+                raise DivergenceError(
+                    "online update rolled back — trained parameters "
+                    "diverged: " + "; ".join(probs))
 
     reg.counter_add("online.updates")
     reg.counter_add("online.delta_nnz", int(delta.nnz))

@@ -1,0 +1,38 @@
+"""repro.resil — always-on resilience layer (ISSUE 7).
+
+The paper's claim is *online* learning: a service that keeps serving
+while ΔΩ streams in.  This package is the machinery that keeps it
+serving through the failures a long-running loop actually meets:
+
+  * `faults`    — deterministic fault injection (the chaos substrate);
+  * `validate`  — poison-batch quarantine (`PoisonBatchError`) and
+    index invariant/recall-smoke validation (`validate_index`);
+  * `rebuild`   — background double-buffered index rebuild with a
+    validate-then-swap gate and rollback-by-default (`IndexRebuilder`);
+  * `guard`     — divergence watchdog with snapshot rollback
+    (`DivergenceError`, `GuardConfig`);
+  * `wal`       — write-ahead log + crash-safe `OnlineUpdater` whose
+    `recover()` replays to a bit-identical `OnlineState`.
+
+Consumers: `serve.service` (admission control, degraded modes, swap),
+`core.online` (boundary validation + guard), `train.checkpoint`
+(crash-atomic saves), the chaos suite (tests/test_resil.py), and the
+bench fault arm (benchmarks/bench_serve.py).  Failure semantics are
+documented in docs/ARCHITECTURE.md §8.
+"""
+from repro.resil import faults
+from repro.resil.faults import FaultPlan, FaultSpec, InjectedFault
+from repro.resil.guard import DivergenceError, GuardConfig, check_divergence
+from repro.resil.rebuild import IndexRebuilder
+from repro.resil.validate import (IndexValidationError, PoisonBatchError,
+                                  check_delta, check_ingest_batch,
+                                  validate_index)
+from repro.resil.wal import OnlineUpdater, WriteAheadLog
+
+__all__ = [
+    "faults", "FaultPlan", "FaultSpec", "InjectedFault",
+    "DivergenceError", "GuardConfig", "check_divergence",
+    "IndexRebuilder", "IndexValidationError", "PoisonBatchError",
+    "check_delta", "check_ingest_batch", "validate_index",
+    "OnlineUpdater", "WriteAheadLog",
+]

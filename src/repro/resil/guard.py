@@ -1,0 +1,77 @@
+"""Divergence guard — param-norm watchdog with snapshot rollback.
+
+The online path (`core.online.online_update`) trains new rows/cols with
+plain SGD on whatever ΔΩ arrived.  A hostile or buggy delta (huge
+ratings that slipped past validation, a mis-set learning rate) can blow
+the new parameters up to inf/NaN; because serving packs params into
+planes wholesale, one diverged update poisons every subsequent score.
+
+`check_divergence` compares the trained parameters against the
+pre-training snapshot:
+
+  * any non-finite entry in a *touched* slice trips immediately;
+  * the RMS of each grown slice (U rows ≥ M_old, V/W/C/b̂ cols ≥ N_old)
+    must stay within ``max_ratio`` × the RMS scale of the corresponding
+    *old* parameters (floored at ``eps`` so a cold start with tiny old
+    norms can't trip spuriously).
+
+On a trip the caller raises `DivergenceError` **before** the new state
+is constructed — the input `OnlineState` is unmodified, so rollback is
+simply "keep what you had" (and the WAL entry for the update stays
+replayable: a replay re-trips deterministically, converging to the same
+rejected-update state — see `resil.wal.recover`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class DivergenceError(RuntimeError):
+    """An online update trained diverged parameters and was rolled back —
+    the caller's pre-update state is unmodified."""
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """``max_ratio`` is deliberately loose (legit new-user vectors train
+    from ~1/√F noise up to the old-param scale; 100× beyond that scale is
+    never a converged model) — the guard is a watchdog, not a metric."""
+    max_ratio: float = 100.0
+    eps: float = 1e-3
+
+
+def _rms(a) -> float:
+    a = np.asarray(a, np.float64)
+    return float(np.sqrt(np.mean(np.square(a)))) if a.size else 0.0
+
+
+def check_divergence(p_new, p_old, *, M_old: int, N_old: int,
+                     cfg: GuardConfig = GuardConfig()) -> list:
+    """Problem strings for the grown slices of ``p_new`` vs the old-param
+    scale of ``p_old`` (empty = healthy).  Host-side; the online path
+    calls it once per update, after training, before state swap."""
+    probs: list = []
+    slices = (
+        ("U", np.asarray(p_new.U)[M_old:], np.asarray(p_old.U)),
+        ("b", np.asarray(p_new.b)[M_old:], np.asarray(p_old.b)),
+        ("V", np.asarray(p_new.V)[N_old:], np.asarray(p_old.V)),
+        ("bh", np.asarray(p_new.bh)[N_old:], np.asarray(p_old.bh)),
+        ("W", np.asarray(p_new.W)[N_old:], np.asarray(p_old.W)),
+        ("C", np.asarray(p_new.C)[N_old:], np.asarray(p_old.C)),
+    )
+    for name, new, old in slices:
+        if new.size == 0:
+            continue
+        if not np.isfinite(new).all():
+            probs.append(f"{name}: non-finite entries in the newly trained "
+                         f"slice")
+            continue
+        scale = max(_rms(old), cfg.eps)
+        r = _rms(new)
+        if r > cfg.max_ratio * scale:
+            probs.append(f"{name}: new-slice RMS {r:.3g} exceeds "
+                         f"{cfg.max_ratio:g}× the old-param scale "
+                         f"{scale:.3g}")
+    return probs

@@ -1,0 +1,145 @@
+"""Double-buffered background index rebuild with validate-then-swap.
+
+The serving loop's weak point was the rebuild: `RecsysService.ingest`
+built index v+1 *on the request path* (every pending flush waited behind
+an O(q·N log N) build) and swapped it in unvalidated — a corrupt build
+(crash mid-way, poisoned signatures, buggy refactor) would be served.
+
+`IndexRebuilder` moves the build off the hot path and gates the swap:
+
+  1. ``submit(sigs, tail_cap)`` hands the *full* signature set to a
+     daemon worker thread; the caller keeps serving index **v**
+     unblocked (jax arrays are immutable, so in-flight flushes that
+     captured v are safe regardless of when the swap lands);
+  2. the worker builds v+1 (`serve.index.build_index`), then runs
+     `resil.validate.validate_index` — CSR bucket invariants plus a
+     self-retrieval recall smoke on a seeded probe set;
+  3. the owner polls ``take()`` at flush boundaries: a validated index
+     comes back exactly once ("ready"); a failed build or failed
+     validation comes back as "failed" with the error — the owner keeps
+     serving v (**rollback is the default**, not an action) and may
+     ``submit`` again to retry.
+
+Only one build runs at a time; a ``submit`` while busy stages the newest
+signature set and the worker picks it up next ("latest wins" — rebuilt
+indexes are snapshots, intermediate ones are never worth finishing).
+
+Fault-injection sites: ``serve.rebuild`` (before the build — exc/stall)
+and ``serve.rebuild.index`` (the built index, before validation —
+corrupt here to exercise the validation gate).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from repro import obs
+from repro.resil import faults
+from repro.resil.validate import IndexValidationError, validate_index
+
+
+class IndexRebuilder:
+    """One background build slot + validation gate.  Thread model: any
+    number of ``submit``/``take``/``status`` callers (they lock); one
+    worker thread at a time."""
+
+    def __init__(self, registry: obs.Registry | None = None, *,
+                 probe: int = 64, seed: int = 0,
+                 validate: bool = True):
+        self.obs = registry if registry is not None else obs.get()
+        self.probe = probe
+        self.seed = seed
+        self.validate = validate
+        self._lock = threading.Lock()
+        self._thread: threading.Thread | None = None
+        self._staged = None          # (sigs, tail_cap) newest pending request
+        self._result = None          # validated index awaiting take()
+        self._error: Exception | None = None
+        self.builds = 0              # attempts started (public counters —
+        self.failures = 0            # chaos tests assert on these)
+        self.swaps_ready = 0
+
+    # -- owner side ---------------------------------------------------------
+
+    def submit(self, sigs, *, tail_cap: int) -> bool:
+        """Request a rebuild from the full [q, N'] signature set.  Returns
+        True if a worker started now, False if staged behind a running
+        build (latest submission wins)."""
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                self._staged = (sigs, tail_cap)
+                return False
+            self._staged = None
+            self._result, self._error = None, None
+            self.builds += 1
+            self._thread = threading.Thread(
+                target=self._work, args=(sigs, tail_cap), daemon=True)
+            self._thread.start()
+            return True
+
+    def status(self) -> str:
+        """idle | building | ready | failed"""
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                return "building"
+            if self._result is not None:
+                return "ready"
+            if self._error is not None:
+                return "failed"
+            return "idle"
+
+    def take(self):
+        """(status, index_or_None, error_or_None); "ready" hands the
+        validated index over exactly once and, if a newer signature set
+        was staged meanwhile, immediately starts building it."""
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                return "building", None, None
+            idx, err = self._result, self._error
+            self._result, self._error = None, None
+            staged, self._staged = self._staged, None
+        if staged is not None:           # latest-wins restart outside lock
+            self.submit(staged[0], tail_cap=staged[1])
+        if idx is not None:
+            return "ready", idx, None
+        if err is not None:
+            return "failed", None, err
+        return "idle", None, None
+
+    def join(self, timeout: float | None = None) -> None:
+        """Block until the current build (if any) finishes — for tests and
+        synchronous callers; the serving loop never calls this."""
+        t = self._thread
+        if t is not None:
+            t.join(timeout)
+
+    # -- worker side --------------------------------------------------------
+
+    def _work(self, sigs, tail_cap: int) -> None:
+        from repro.serve.index import build_index   # import off the hot path
+        t0 = time.perf_counter()
+        try:
+            with self.obs.span("serve.rebuild.bg"):
+                faults.fire("serve.rebuild")
+                idx = build_index(sigs, tail_cap=tail_cap)
+                idx = faults.fire("serve.rebuild.index", idx)
+                if self.validate:
+                    with self.obs.span("serve.rebuild.bg.validate"):
+                        probs = validate_index(idx, probe=self.probe,
+                                               seed=self.seed)
+                    if probs:
+                        raise IndexValidationError(
+                            "rebuilt index failed validation: "
+                            + "; ".join(probs[:3]))
+        except Exception as e:   # noqa: BLE001 — any failure means rollback
+            with self._lock:
+                self._error, self._result = e, None
+                self.failures += 1
+            self.obs.counter_add("serve.rebuild.failed")
+            return
+        with self._lock:
+            self._result, self._error = idx, None
+            self.swaps_ready += 1
+        self.obs.counter_add("serve.rebuild.built")
+        self.obs.gauge_set("serve.rebuild.last_build_s",
+                           time.perf_counter() - t0)

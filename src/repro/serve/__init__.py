@@ -3,7 +3,10 @@
 Turns the training-side simLSH signatures into a production retrieval
 stack: persistent bucketed index (`index`), batched candidate retrieval
 (`retrieve`), and a micro-batching serving loop with candidate-only
-scoring through the fused Pallas kernel (`service`).
+scoring through the fused Pallas kernel (`service`).  The serving loop
+is hardened by `repro.resil`: bounded admission with load shedding,
+degraded popularity fallback, background validate-then-swap index
+rebuilds, and poison-batch quarantine (docs/ARCHITECTURE.md §8).
 """
 from repro.serve.index import (LSHIndex, build_index, insert, lookup_items,
                                lookup_signatures, needs_rebuild, rebuild)

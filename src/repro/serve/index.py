@@ -105,13 +105,25 @@ def build_index(sigs: jax.Array, *, tail_cap: int = 1024) -> LSHIndex:
     Item ids are the column positions 0..N-1 — the same id space as the
     factor matrix V, so lookups compose directly with scoring.
     """
-    assert sigs.dtype == jnp.int32, f"signatures must be int32, got {sigs.dtype}"
+    # raises (not asserts — these guard data integrity and must survive
+    # ``python -O``): a float signature matrix means NaN poisoning
+    # upstream; anything non-int32 would be silently reinterpreted by the
+    # CSR layout's int32 contract
+    if sigs.dtype != jnp.int32:
+        hint = (" (float signatures usually mean a NaN-poisoned pipeline "
+                "— pass simlsh.pack_bits output)"
+                if jnp.issubdtype(sigs.dtype, jnp.floating) else "")
+        raise TypeError(f"build_index: signatures must be int32, got "
+                        f"{sigs.dtype}{hint}")
+    if sigs.ndim != 2:
+        raise ValueError(f"build_index: expected [q, N] signatures, got "
+                         f"shape {sigs.shape}")
     # retrieve.dedup_candidates runs ids through an invertible
     # multiplicative hash mod 2³⁰ — ids at or above 2³⁰ would silently
     # alias in the dedup, so refuse them at build time
-    assert sigs.shape[1] <= 1 << 30, (
-        f"item ids must stay below 2^30 (the dedup hash mask); "
-        f"got N={sigs.shape[1]}")
+    if sigs.shape[1] > 1 << 30:
+        raise ValueError(f"build_index: item ids must stay below 2^30 (the "
+                         f"dedup hash mask); got N={sigs.shape[1]}")
     idx = _build(sigs, tail_cap=tail_cap)
     object.__setattr__(idx, "_tail_host", 0)
     return idx
@@ -130,13 +142,20 @@ def insert(index: LSHIndex, new_sigs: jax.Array, new_ids: jax.Array) -> LSHIndex
     if tl + n > index.tail_cap:
         raise ValueError(
             f"tail overflow ({tl}+{n} > {index.tail_cap}): rebuild the index")
-    # the 2^30 id contract (dedup hash mask): checked here for host
-    # arrays; device arrays skip it rather than force an ingestion-plane
-    # sync — their callers assert the bound host-side instead
-    # (`build_index`/`rebuild` on N; `ingest_online_update` on state.N)
+    # id contract (non-negative ints below the 2^30 dedup hash mask):
+    # checked here for host arrays; device arrays skip it rather than
+    # force an ingestion-plane sync — their callers assert the bound
+    # host-side instead (`build_index`/`rebuild` on N;
+    # `ingest_online_update` on state.N, plus the service's
+    # check_ingest_batch at the boundary)
     if n and isinstance(new_ids, (np.ndarray, list, tuple)):
-        assert int(np.max(new_ids)) < 1 << 30, \
-            "item ids must stay below 2^30 (the dedup hash mask)"
+        from repro.resil.validate import check_ids   # lazy: keep index.py
+        check_ids(new_ids, what="insert new_ids")    # import-light
+    if new_sigs is not None and hasattr(new_sigs, "dtype") \
+            and np.issubdtype(np.dtype(new_sigs.dtype), np.floating):
+        raise TypeError(
+            f"insert: signatures must be int32, got {new_sigs.dtype} — "
+            f"float signatures usually mean a NaN-poisoned pipeline")
     tail_sigs = jax.lax.dynamic_update_slice(
         index.tail_sigs, jnp.asarray(new_sigs, jnp.int32), (0, tl))
     tail_ids = jax.lax.dynamic_update_slice(

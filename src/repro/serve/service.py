@@ -29,6 +29,16 @@ Online ingestion (paper Alg. 4): `ingest_online_update` re-signs the
 accumulator cache from `core.online.online_update` and *inserts* the new
 columns into the index tail — no rebuild, no cold jit caches — falling back
 to a rebuild only when the tail overflows.
+
+Resilience (ISSUE 7, see docs/ARCHITECTURE.md §8): tail-overflow rebuilds
+run on a background thread behind a validate-then-swap gate
+(`resil.rebuild`) while index v keeps serving; the admission queue is
+bounded (``max_pending``) with deadline-aware load shedding
+(``deadline_s``) into a host-side popularity answer; hot-path failures
+fall back to the exact `full_topn` baseline; and poison ingest batches
+are quarantined (`resil.validate`) before any state is touched.  All of
+it is observable — shed/degraded/fallback/quarantine counters live in
+the service registry and surface through `stats()`.
 """
 from __future__ import annotations
 
@@ -44,8 +54,13 @@ import numpy as np
 from repro import obs
 from repro.core import model, simlsh
 from repro.core.model import Params
+from repro.core.topk import SENTINEL
 from repro.data.sparse import SparseMatrix
 from repro.kernels.candidate_score.ops import score_candidates
+from repro.resil import faults
+from repro.resil.rebuild import IndexRebuilder
+from repro.resil.validate import (PoisonBatchError, check_accumulators,
+                                  check_ingest_batch)
 from repro.serve import index as lsh_index
 from repro.serve.retrieve import (candidate_pool, finalize_candidates,
                                   retrieve_for_users)
@@ -69,6 +84,21 @@ class ServeConfig:
     pool_width: int = 0       # generic pre-dedup pool compaction width
                               # (0 = off — a wash on CPU, see
                               # retrieve.compact_pool; knob for TPU)
+    # resilience knobs (ISSUE 7)
+    max_pending: int = 0      # admission bound on queued users (0 = off);
+                              # overflow sheds the *oldest* chunks into the
+                              # degraded popularity path.  Keep it ≥ a few
+                              # micro_batches or steady traffic sheds too
+    deadline_s: float = 0.0   # queue-wait deadline (0 = off): chunks older
+                              # than this at dispatch time are shed instead
+                              # of scored — bounded staleness over stalls
+    background_rebuild: bool = True  # overflow rebuilds run on a worker
+                              # thread behind a validate-then-swap gate
+                              # (resil.rebuild); False = legacy synchronous
+                              # rebuild on the ingest path
+    rebuild_retries: int = 3  # failed/invalid background builds are retried
+                              # this many times before giving up (the old
+                              # index keeps serving either way)
     # kernel knobs
     tile_b: int = 8
     interpret: bool | None = None  # None = auto (interpret only on CPU);
@@ -162,10 +192,19 @@ class RecsysService:
         # pending request chunks: (user_ids, t_submitted)
         self._pending: collections.deque = collections.deque()
         self._n_pending = 0
-        # dispatched-but-unsynced flushes: (user_ids, n_real, t0_ns, outputs)
+        # dispatched-but-unsynced flushes:
+        # (user_ids, n_real, t0_ns, outputs, degraded)
         self._inflight: collections.deque = collections.deque()
         self._results: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
         self._last_ready_ns = 0
+        # resilience state (ISSUE 7): background rebuild slot + host-side
+        # bias mirror for the degraded popularity path (invalidated on
+        # parameter swap)
+        self._rebuilder: IndexRebuilder | None = None
+        self._rebuild_sigs = None        # full sigs of the build in flight
+        self._rebuild_attempts = 0
+        self._rebuild_t0 = 0.0
+        self._host_bias = None           # (mu, b, bh) numpy mirror
 
     # ---- core pipelines (fixed [micro_batch] shapes → warm jit caches) ----
 
@@ -195,10 +234,18 @@ class RecsysService:
     # ---- request plane ----
 
     def submit(self, user_ids) -> None:
-        """Queue a request (any shape); flushes whole micro-batches."""
+        """Queue a request (any shape); flushes whole micro-batches.
+
+        Admission control (``cfg.max_pending``): when the queue exceeds
+        the bound, the *oldest* queued users are shed into the degraded
+        popularity path — under overload the service answers with bounded
+        staleness instead of letting queue wait grow without limit."""
+        self._poll_rebuild()
         arr = np.atleast_1d(np.asarray(user_ids, np.int32))
         self._pending.append((arr, time.perf_counter()))
         self._n_pending += arr.shape[0]
+        if self.cfg.max_pending and self._n_pending > self.cfg.max_pending:
+            self._shed_over_bound()
         self.obs.gauge_set("serve.queue_depth", self._n_pending)
         while self._n_pending >= self.cfg.micro_batch:
             self._flush_one()
@@ -206,20 +253,94 @@ class RecsysService:
     def flush(self) -> None:
         """Drain everything pending (final partial batch is padded) and
         sync every dispatched flush."""
+        self._poll_rebuild()
         while self._n_pending:
             self._flush_one()
         while self._inflight:
             self._sync_oldest()
 
+    # ---- load shedding / degraded serving (ISSUE 7) ----
+
+    def _host_degraded(self, users: np.ndarray):
+        """Host-side popularity answer: items = the global shortlist,
+        scores = the bias part of Eq. (1) (μ + b_u + b̂_j) — no retrieval,
+        no device dispatch.  None when ``n_popular`` is off (callers then
+        drop instead of degrading)."""
+        if self.popular is None:
+            return None
+        if self._host_bias is None:
+            p = self.params
+            self._host_bias = (float(p.mu), np.asarray(p.b), np.asarray(p.bh))
+        mu, b, bh = self._host_bias
+        topn = self.cfg.topn
+        pop = np.asarray(self.popular)[:topn]
+        n, w = users.shape[0], pop.shape[0]
+        safe_u = np.clip(users, 0, b.shape[0] - 1)
+        items = np.full((n, topn), SENTINEL, np.int32)
+        items[:, :w] = pop[None, :]
+        scores = np.full((n, topn), -np.inf, np.float32)
+        scores[:, :w] = mu + b[safe_u][:, None] + bh[pop][None, :]
+        return scores, items
+
+    def _shed_chunks(self, chunks: list) -> None:
+        """Turn shed request chunks into one degraded pseudo-flush so
+        `take_results` keeps submission order (shed chunks are always a
+        FIFO prefix of the queue, so enqueueing the entry now — before
+        the next real dispatch — preserves ordering)."""
+        users = chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
+        reg = self.obs
+        reg.counter_add("serve.shed_users", users.shape[0])
+        res = self._host_degraded(users)
+        if res is None:          # no popularity shortlist → drop, loudly
+            reg.counter_add("serve.dropped_users", users.shape[0])
+            return
+        scores, items = res
+        reg.counter_add("serve.degraded_users", users.shape[0])
+        self._inflight.append((users, users.shape[0],
+                               time.perf_counter_ns(), (scores, items), True))
+
+    def _shed_over_bound(self) -> None:
+        bound = self.cfg.max_pending
+        shed: list = []
+        while self._pending and self._n_pending > bound:
+            a, t_sub = self._pending.popleft()
+            excess = self._n_pending - bound
+            if a.shape[0] > excess:      # split: shed only the overflow
+                self._pending.appendleft((a[excess:], t_sub))
+                a = a[:excess]
+            shed.append(a)
+            self._n_pending -= a.shape[0]
+        if shed:
+            self._shed_chunks(shed)
+
+    def _shed_expired(self, now: float) -> None:
+        """Deadline shedding: queue-wait is monotone along the FIFO, so
+        expired chunks are exactly the queue prefix."""
+        dl = self.cfg.deadline_s
+        shed: list = []
+        while self._pending and now - self._pending[0][1] > dl:
+            a, _ = self._pending.popleft()
+            self._n_pending -= a.shape[0]
+            shed.append(a)
+        if shed:
+            self._shed_chunks(shed)
+
     def _flush_one(self) -> None:
         """Dispatch one micro-batch; sync the *previous* flush only after
-        this one is enqueued (double-buffered dispatch-ahead)."""
+        this one is enqueued (double-buffered dispatch-ahead).
+
+        Resilience: expired chunks are shed *before* filling the batch
+        (deadline shedding), and a hot-path failure — injected or real —
+        falls back to the exact O(N) `full_topn` baseline instead of
+        failing the flush (counter ``serve.fallback_full``)."""
         mb = self.cfg.micro_batch
         reg = self.obs
         with reg.span("serve.flush.dispatch"):
             # consume only as many queued arrays as one micro-batch needs —
             # a huge submit is sliced by view, not re-concatenated per flush
             now = time.perf_counter()
+            if self.cfg.deadline_s:
+                self._shed_expired(now)
             chunks, n, t_last = [], 0, now
             while self._pending and n < mb:
                 a, t_sub = self._pending.popleft()
@@ -227,9 +348,9 @@ class RecsysService:
                 chunks.append(a)
                 n += a.shape[0]
                 t_last = t_sub
-            flat = (chunks[0] if len(chunks) == 1 else
-                    np.concatenate(chunks) if chunks else
-                    np.zeros((0,), np.int32))
+            if not chunks:           # everything this flush would have
+                return               # taken was shed past its deadline
+            flat = chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
             take = flat[:mb]
             if flat.size > mb:
                 # overflow comes entirely from the last chunk popped
@@ -240,18 +361,44 @@ class RecsysService:
             if n_real < mb:  # pad the final partial batch to the jitted shape
                 take = np.concatenate([take, np.zeros(mb - n_real, np.int32)])
 
-            t0_ns = time.perf_counter_ns()
-            out = self._recommend(jnp.asarray(take))      # async dispatch
-        self._inflight.append((take, n_real, t0_ns, out))
+            try:
+                faults.fire("serve.flush")    # before the timer: injected
+                # stalls read as queue wait, not scoring latency
+                t0_ns = time.perf_counter_ns()
+                out = self._recommend(jnp.asarray(take))  # async dispatch
+            except Exception:  # noqa: BLE001 — degrade, never stall
+                reg.counter_add("serve.fallback_full")
+                t0_ns = time.perf_counter_ns()
+                out = full_topn(self.params, jnp.asarray(take),
+                                topn=self.cfg.topn)
+        self._inflight.append((take, n_real, t0_ns, out, False))
         reg.counter_add("serve.flushes")
         while len(self._inflight) > 1:
             self._sync_oldest()
 
     def _sync_oldest(self) -> None:
-        take, n_real, t0_ns, (scores, items) = self._inflight.popleft()
-        jax.block_until_ready(items)
-        now_ns = time.perf_counter_ns()
+        take, n_real, t0_ns, (scores, items), degraded = \
+            self._inflight.popleft()
         reg = self.obs
+        if degraded:
+            # shed pseudo-flush: results were computed host-side at shed
+            # time; it never touched the device, so it contributes no
+            # flush latency / busy time (keeping p50/p95/p99 about the
+            # real pipeline)
+            reg.counter_add("serve.users", n_real)
+            self._results.append((take[:n_real], scores[:n_real],
+                                  items[:n_real]))
+            return
+        try:
+            jax.block_until_ready(items)
+        except Exception:  # noqa: BLE001 — deferred device failure:
+            # recompute through the exact baseline rather than lose a
+            # dispatched batch
+            reg.counter_add("serve.fallback_full")
+            scores, items = full_topn(self.params, jnp.asarray(take),
+                                      topn=self.cfg.topn)
+            jax.block_until_ready(items)
+        now_ns = time.perf_counter_ns()
         # latency: dispatch → result readiness (includes time queued
         # behind the previous flush); busy wall: overlap counted once
         reg.record_span("serve.flush", t0_ns, now_ns - t0_ns)
@@ -268,7 +415,11 @@ class RecsysService:
 
         Results are appended at sync time in dispatch order, so the k-th
         tuple is the k-th flushed micro-batch and its rows line up with
-        the user ids that were submitted (padding already stripped)."""
+        the user ids that were submitted (padding already stripped).
+        Shed chunks appear as degraded pseudo-flushes in the same
+        submission order (they are always a queue prefix, enqueued before
+        the next real dispatch); only fully *dropped* requests
+        (``n_popular == 0`` under shedding) produce no rows."""
         out, self._results = self._results, []
         return out
 
@@ -292,6 +443,18 @@ class RecsysService:
             p99_ms=float(np.percentile(secs, 99) * 1e3),
             queue=self._n_pending,
             ingest_to_servable_s=reg.gauge("serve.ingest_to_servable_s", 0.0),
+            # resilience counters (ISSUE 7): shed = admission/deadline
+            # victims, degraded = shed users answered via the popularity
+            # path, dropped = shed with no fallback, fallbacks = flushes
+            # rescued by exact full scoring, quarantined = poison ingest
+            # batches rejected, index_stale = overflow awaiting a
+            # background rebuild swap
+            shed=int(reg.counter("serve.shed_users")),
+            degraded=int(reg.counter("serve.degraded_users")),
+            dropped=int(reg.counter("serve.dropped_users")),
+            fallbacks=int(reg.counter("serve.fallback_full")),
+            quarantined=int(reg.counter("serve.quarantined")),
+            index_stale=bool(reg.gauge("serve.index_stale", 0.0)),
         )
 
     def profile_flush(self, user_ids=None) -> dict:
@@ -346,16 +509,77 @@ class RecsysService:
 
     # ---- ingestion plane (paper Alg. 4) ----
 
+    # ---- background rebuild (ISSUE 7: double-buffered validate-then-swap) --
+
+    def _start_rebuild(self, full_sigs) -> None:
+        if self._rebuilder is None:
+            self._rebuilder = IndexRebuilder(self.obs)
+        self._rebuild_sigs = full_sigs       # kept for bounded auto-retry
+        self._rebuild_attempts = 0
+        self._rebuild_t0 = time.perf_counter()
+        # stale: the tail overflowed, so items past base+tail are not yet
+        # retrievable — cleared when the validated v+1 swaps in
+        self.obs.gauge_set("serve.index_stale", 1.0)
+        self._rebuilder.submit(full_sigs, tail_cap=self.index.tail_cap)
+
+    def _poll_rebuild(self) -> None:
+        """Called at the serving-loop edges (submit/flush/ingest): swap in
+        a validated rebuild, or retry/roll back a failed one.  Serving
+        index v continues uninterrupted in every branch — in-flight
+        flushes captured v (jax arrays are immutable), and a failed or
+        invalid build is simply never taken."""
+        if self._rebuilder is None:
+            return
+        status, idx, err = self._rebuilder.take()
+        if status == "ready":
+            self.index = idx
+            self._rebuild_sigs = None
+            with self.obs.span("serve.rebuild.swap"):
+                self.warmup()        # n_base changed → one retrace, absorbed
+            self.obs.counter_add("serve.rebuild.swaps")
+            self.obs.gauge_set("serve.index_stale", 0.0)
+            self.obs.gauge_set("serve.ingest_to_servable_s",
+                               time.perf_counter() - self._rebuild_t0)
+        elif status == "failed":
+            self._rebuild_attempts += 1
+            if (self._rebuild_sigs is not None
+                    and self._rebuild_attempts < self.cfg.rebuild_retries):
+                self.obs.counter_add("serve.rebuild.retries")
+                self._rebuilder.submit(self._rebuild_sigs,
+                                       tail_cap=self.index.tail_cap)
+            else:
+                # rollback is the default: keep serving v; the index stays
+                # stale (missing post-overflow items) and says so loudly
+                self.obs.counter_add("serve.rebuild.gave_up")
+                self._rebuild_sigs = None
+
+    # ---- ingestion entry points ----
+
     def ingest(self, new_sigs: jax.Array, new_ids: jax.Array,
                full_sigs: jax.Array | None = None) -> None:
-        """Insert new items into the index tail; rebuild only on overflow
+        """Insert new items into the index tail; rebuild on overflow
         (rebuild requires ``full_sigs`` [q, N_total]).
+
+        With ``cfg.background_rebuild`` (default) an overflow hands
+        ``full_sigs`` — which already contain the new items — to the
+        background rebuilder and returns immediately: the service keeps
+        serving index v (marked stale) and swaps in the validated v+1 at
+        a later flush boundary.  Poison batches (wrong dtype, NaN rows,
+        negative/duplicate ids) raise `PoisonBatchError` before any state
+        is touched.
 
         Crossing the empty-tail boundary (first insert, or a rebuild
         folding the tail away) flips the static tail fast path in
         `_recommend`, so re-warm here — the retrace lands in ingestion
         time, not in the next request's latency window."""
         t0_ns = time.perf_counter_ns()
+        try:
+            check_ingest_batch(new_sigs, new_ids, q=self.index.q)
+        except PoisonBatchError:
+            self.obs.counter_add("serve.quarantined")
+            raise
+        faults.fire("serve.ingest")
+        self._poll_rebuild()
         with self.obs.span("serve.ingest"):
             had_tail = self.index.tail_fill > 0
             rebuilt = lsh_index.needs_rebuild(self.index,
@@ -364,21 +588,29 @@ class RecsysService:
                 if full_sigs is None:
                     raise ValueError(
                         "tail overflow and no full_sigs to rebuild")
-                with self.obs.span("serve.ingest.rebuild"):
-                    self.index = lsh_index.rebuild(self.index, full_sigs)
+                if self.cfg.background_rebuild:
+                    self._start_rebuild(full_sigs)
+                else:
+                    with self.obs.span("serve.ingest.rebuild"):
+                        self.index = lsh_index.rebuild(self.index, full_sigs)
             else:
                 with self.obs.span("serve.ingest.insert"):
                     self.index = lsh_index.insert(self.index, new_sigs,
                                                   new_ids)
-            if rebuilt or (self.index.tail_fill > 0) != had_tail:
+            sync_done = not (rebuilt and self.cfg.background_rebuild)
+            if sync_done and (rebuilt
+                              or (self.index.tail_fill > 0) != had_tail):
                 with self.obs.span("serve.ingest.warmup"):
                     self.warmup()
         self.obs.counter_add("serve.ingests")
         self.obs.counter_add("serve.ingested_items", int(new_ids.shape[0]))
         # ingest→servable: new items are retrievable the moment ingest
-        # returns (and any forced retrace has already been re-warmed)
-        self.obs.gauge_set("serve.ingest_to_servable_s",
-                           (time.perf_counter_ns() - t0_ns) * 1e-9)
+        # returns (and any forced retrace has already been re-warmed); on
+        # the background-rebuild path _poll_rebuild overwrites this with
+        # the overflow→swap latency once v+1 lands
+        if sync_done:
+            self.obs.gauge_set("serve.ingest_to_servable_s",
+                               (time.perf_counter_ns() - t0_ns) * 1e-9)
 
     def ingest_online_update(self, state, N_old: int) -> None:
         """Adopt a `core.online.online_update` result: swap in the grown
@@ -390,6 +622,14 @@ class RecsysService:
         one retrace of the serving pipelines — re-warm here so the compile
         lands in ingestion time, not in a request's latency window."""
         t0_ns = time.perf_counter_ns()
+        # quarantine before touching anything: NaN-poisoned accumulator
+        # slabs would re-sign new columns into valid-looking garbage
+        # signatures (silent mis-bucketing, not a crash)
+        try:
+            check_accumulators(state.S, N_old)
+        except PoisonBatchError:
+            self.obs.counter_add("serve.quarantined")
+            raise
         with self.obs.span("serve.ingest_online"):
             self.flush()    # drain in-flight work against the old planes
             with self.obs.span("serve.ingest_online.resign"):
@@ -402,6 +642,7 @@ class RecsysService:
             with self.obs.span("serve.ingest_online.swap"):
                 self.params = state.params
                 self.planes = model.pack_serve_planes(state.params)
+                self._host_bias = None     # degraded-path mirror is stale
                 self.sp = state.sp
                 if self.JK is not None:
                     self.JK = state.JK

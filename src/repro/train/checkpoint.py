@@ -11,10 +11,20 @@ Design for the 1000+-node posture (DESIGN.md §5):
   * atomic rename (tmp dir → step dir) so a crash mid-save never corrupts
     the latest complete checkpoint.
 
+Crash-atomicity (ISSUE 7): every file inside the staging dir is written
+to a temp name and ``os.replace``d (so even the staging dir never holds
+a torn file), the manifest is written **last** (its presence certifies
+the step), and the staging→final directory rename is the commit point.
+The read side treats the manifest as the completeness marker:
+``latest_step``/``restore``/``try_restore`` *skip* torn or partial step
+dirs (no manifest, unreadable manifest, missing/unloadable shard)
+instead of raising, falling back to the newest complete step — a crash
+mid-save can delay recovery by one checkpoint, never corrupt it.
+
 On this single-process container "per host" degenerates to one file, but the
 code paths (manifest, atomic rename, reshard-on-restore, async) are the real
-ones and are exercised by tests/test_checkpoint.py including a simulated
-kill-and-restart and a mesh-size change.
+ones and are exercised by tests/test_resil.py including a simulated
+kill-and-restart, a torn-directory recovery, and injected save crashes.
 """
 from __future__ import annotations
 
@@ -22,6 +32,7 @@ import json
 import os
 import shutil
 import threading
+import zipfile
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +44,17 @@ _save_thread: threading.Thread | None = None
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+def _replace_write(path: str, write_fn) -> None:
+    """Write via temp file + fsync + ``os.replace`` so ``path`` either
+    doesn't exist or is complete — never torn."""
+    tmp = f"{path}.tmp-{os.getpid()}"
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def wait():
@@ -50,16 +72,24 @@ def save(directory: str, tree, *, step: int, sync: bool = False):
     host_leaves = [np.asarray(x) for x in leaves]
 
     def _write():
+        from repro.resil import faults   # lazy: no import cycle via resil.wal
         tmp = os.path.join(directory, f".tmp-{step}")
         final = os.path.join(directory, f"step-{step:08d}")
         os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, f"shard-{jax.process_index()}.npz"),
-                 **{f"a{i}": a for i, a in enumerate(host_leaves)})
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump({"step": step, "nleaves": len(host_leaves)}, f)
+        _replace_write(os.path.join(tmp, f"shard-{jax.process_index()}.npz"),
+                       lambda f: np.savez(f, **{f"a{i}": a for i, a in
+                                                enumerate(host_leaves)}))
+        # injected-crash window: shard written, manifest not — readers must
+        # treat the resulting dir (if it ever escaped) as torn
+        faults.fire("ckpt.save")
+        # manifest last: its presence certifies every shard landed
+        _replace_write(
+            os.path.join(tmp, "manifest.json"),
+            lambda f: f.write(json.dumps(
+                {"step": step, "nleaves": len(host_leaves)}).encode()))
         if os.path.isdir(final):
             shutil.rmtree(final)
-        os.rename(tmp, final)
+        os.rename(tmp, final)            # the commit point
         _prune(directory, keep=3)
 
     global _save_thread
@@ -74,13 +104,48 @@ def _prune(directory: str, keep: int):
     steps = sorted(d for d in os.listdir(directory) if d.startswith("step-"))
     for d in steps[:-keep]:
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    # saves are serialized (save() joins the previous writer), so any
+    # remaining staging dir is a crash remnant — our own was just renamed
+    for d in os.listdir(directory):
+        if d.startswith(".tmp-"):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def _complete(directory: str, step: int) -> bool:
+    """True iff the step dir has a parseable manifest and a loadable shard
+    for this process — the torn-checkpoint filter (ISSUE 7)."""
+    d = os.path.join(directory, f"step-{step:08d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            man = json.load(f)
+        with np.load(os.path.join(d, f"shard-{jax.process_index()}.npz"),
+                     allow_pickle=False) as data:
+            names = set(data.files)
+        return all(f"a{i}" in names for i in range(int(man["nleaves"])))
+    except (OSError, ValueError, KeyError, json.JSONDecodeError, zipfile.BadZipFile):
+        return False
+
+
+def _steps(directory: str) -> list:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        if d.startswith("step-"):
+            try:
+                out.append(int(d.split("-")[1]))
+            except ValueError:
+                continue
+    return sorted(out)
 
 
 def latest_step(directory: str) -> int | None:
-    if not os.path.isdir(directory):
-        return None
-    steps = sorted(d for d in os.listdir(directory) if d.startswith("step-"))
-    return int(steps[-1].split("-")[1]) if steps else None
+    """Newest *complete* step — torn or partial step dirs (crash between
+    shard and manifest, truncated shard) are skipped, not raised on."""
+    for s in reversed(_steps(directory)):
+        if _complete(directory, s):
+            return s
+    return None
 
 
 def restore(directory: str, tree_like, *, step: int | None = None,
@@ -88,12 +153,21 @@ def restore(directory: str, tree_like, *, step: int | None = None,
     """Restore into the structure (and optionally shardings) of `tree_like`.
 
     `shardings` may be a pytree of NamedShardings for a *different* mesh than
-    the one that saved — elastic restart path.
+    the one that saved — elastic restart path.  With ``step=None`` the
+    newest complete step wins; an explicit torn ``step`` raises with the
+    torn dir named.
     """
     wait()
-    step = step if step is not None else latest_step(directory)
     if step is None:
-        raise FileNotFoundError(f"no checkpoint under {directory}")
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under "
+                                    f"{directory}")
+    elif not _complete(directory, step):
+        raise FileNotFoundError(
+            f"checkpoint step {step} under {directory} is missing or torn "
+            f"(no manifest / unloadable shard) — pass step=None to fall "
+            f"back to the newest complete step")
     d = os.path.join(directory, f"step-{step:08d}")
     data = np.load(os.path.join(d, f"shard-{jax.process_index()}.npz"))
     leaves, treedef = _flatten(tree_like)

@@ -23,7 +23,7 @@ def _run(name, timeout=900):
 
 # rotation/compression import `repro.dist.{rotation,compression}`, a module
 # the seed commit references but never shipped — xfail until someone either
-# recovers/rewrites it or deletes the checks (tracked in ARCHITECTURE.md §9).
+# recovers/rewrites it or deletes the checks (tracked in ARCHITECTURE.md §10).
 _MISSING_DIST = pytest.mark.xfail(
     reason="seed-vestigial: repro.dist module missing from the seed commit",
     strict=True)

@@ -1,0 +1,575 @@
+"""Chaos suite for the resilience layer (ISSUE 7).
+
+Every scenario injects a deterministic fault (`repro.resil.faults`) and
+asserts the always-on contract:
+
+  * a corrupt or failed index rebuild is NEVER swapped in (serving rolls
+    back to index v by default);
+  * under overload the service SHEDS (degraded popularity answers, in
+    submission order) instead of stalling;
+  * a crash mid-ingest replays from the WAL to a state bit-identical to
+    the uninterrupted run;
+  * a diverged online update is rolled back, and the rollback is
+    replay-stable;
+  * a crash mid-checkpoint never corrupts the newest complete step.
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.resil as resil
+from repro.core import online, simlsh, topk
+from repro.core.model import init_from_data
+from repro.core.sgd import Hyper
+from repro.data import synthetic as syn
+from repro.data.sparse import from_coo
+from repro.resil import faults, wal
+from repro.resil.validate import check_accumulators, check_ids
+from repro.serve import build_index, insert, lookup_signatures
+from repro.serve.service import RecsysService, ServeConfig
+from repro.train import checkpoint
+
+SENTINEL = topk.SENTINEL
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """A failing chaos test must not poison the next one."""
+    yield
+    faults.uninstall()
+
+
+# ---------------------------------------------------------------- faults
+
+def test_fault_plan_is_deterministic_and_counts():
+    spec = resil.FaultSpec(kind="exc", at_calls=(1,), rate=0.25)
+    seqs = []
+    for _ in range(2):
+        plan = resil.FaultPlan({"site": spec}, seed=7)
+        hits = []
+        for i in range(40):
+            try:
+                plan.fire("site")
+                hits.append(0)
+            except resil.InjectedFault:
+                hits.append(1)
+        seqs.append(hits)
+    assert seqs[0] == seqs[1], "same seed must give the same fault sequence"
+    assert seqs[0][1] == 1, "at_calls=(1,) must fire on the second call"
+    assert 1 <= sum(seqs[0]) < 40
+    plan = resil.FaultPlan({"site": spec}, seed=7)
+    for _ in range(3):
+        try:
+            plan.fire("site")
+        except resil.InjectedFault:
+            pass
+    assert plan.calls["site"] == 3 and plan.fired["site"] >= 1
+
+
+def test_injected_context_never_leaks_and_refuses_stacking():
+    with faults.injected({"x": resil.FaultSpec(at_calls=(0,))}):
+        assert faults.active() is not None
+        with pytest.raises(RuntimeError, match="already installed"):
+            faults.install(resil.FaultPlan({}))
+    assert faults.active() is None
+    assert faults.fire("x", payload=41) == 41   # no plan → pass-through
+
+
+def test_fault_kinds_corrupt_and_stall():
+    with faults.injected({"c": resil.FaultSpec(kind="corrupt",
+                                               mutate=lambda p: p + 1,
+                                               at_calls=(0,)),
+                          "s": resil.FaultSpec(kind="stall", stall_s=0.02,
+                                               at_calls=(0,))}):
+        assert faults.fire("c", payload=1) == 2
+        t0 = time.perf_counter()
+        faults.fire("s")
+        assert time.perf_counter() - t0 >= 0.02
+
+
+# ---------------------------------------------------------------- validate
+
+def test_check_ids_rejects_poison():
+    with pytest.raises(resil.PoisonBatchError, match="NaN"):
+        check_ids(np.array([1.0, np.nan]), what="t")
+    with pytest.raises(resil.PoisonBatchError, match="negative"):
+        check_ids(np.array([3, -1]), what="t")
+    with pytest.raises(resil.PoisonBatchError, match="2\\^30"):
+        check_ids(np.array([1 << 30]), what="t")
+    with pytest.raises(resil.PoisonBatchError, match="out of range"):
+        check_ids(np.array([5]), what="t", upper=5)
+    assert check_ids(np.array([0, 4], np.int32), what="t").dtype == np.int32
+
+
+def test_check_delta_rejects_poison():
+    ok = dict(M_new=10, N_new=10, M_old=8, N_old=8)
+    r = np.array([1, 2], np.int32)
+    with pytest.raises(resil.PoisonBatchError, match="non-finite"):
+        resil.check_delta(r, r, np.array([1.0, np.inf], np.float32), **ok)
+    with pytest.raises(resil.PoisonBatchError, match="shrink"):
+        resil.check_delta(r, r, np.ones(2, np.float32),
+                          M_new=4, N_new=10, M_old=8, N_old=8)
+    with pytest.raises(resil.PoisonBatchError, match="equal-length"):
+        resil.check_delta(r, r[:1], np.ones(2, np.float32), **ok)
+    with pytest.raises(resil.PoisonBatchError, match="empty"):
+        resil.check_delta(r[:0], r[:0], np.ones(0, np.float32), **ok)
+
+
+def test_check_accumulators_names_poisoned_column():
+    S = np.zeros((2, 6, 4), np.float32)
+    S[:, 0, :] = np.nan
+    check_accumulators(S, N_old=5)          # old columns: not our problem
+    S[0, 4, 1] = np.nan
+    with pytest.raises(resil.PoisonBatchError, match="column 4"):
+        check_accumulators(S, N_old=3)
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    rng = np.random.default_rng(0)
+    rows = np.repeat(np.arange(60), 4).astype(np.int32)
+    cols = rng.integers(0, 40, 240).astype(np.int32)
+    vals = rng.integers(1, 6, 240).astype(np.float32)
+    sp = from_coo(rows, cols, vals, (60, 40))
+    cfg = simlsh.SimLSHConfig(G=8, p=2, q=8)
+    sigs = simlsh.encode(sp, cfg, jax.random.PRNGKey(0))
+    return sp, cfg, sigs, build_index(sigs, tail_cap=8)
+
+
+def test_validate_index_passes_good_and_catches_corruption(small_index):
+    _, _, sigs, index = small_index
+    assert resil.validate_index(index) == []
+    # corrupt one band's permutation → caught structurally
+    bad = dataclasses.replace(
+        index, sorted_ids=index.sorted_ids.at[0, 0].set(index.sorted_ids[0, 1]))
+    object.__setattr__(bad, "_tail_host", 0)
+    assert any("permutation" in p for p in resil.validate_index(bad))
+    # corrupt bucket offsets → caught against searchsorted reference
+    bad2 = dataclasses.replace(
+        index, bucket_hi=index.bucket_hi.at[2].set(0))
+    object.__setattr__(bad2, "_tail_host", 0)
+    assert any("bucket" in p for p in resil.validate_index(bad2))
+    # shuffled signatures → not ascending
+    bad3 = dataclasses.replace(
+        index, sorted_sigs=index.sorted_sigs[:, ::-1])
+    object.__setattr__(bad3, "_tail_host", 0)
+    assert any("ascending" in p for p in resil.validate_index(bad3))
+
+
+def test_index_build_and_insert_reject_poison(small_index):
+    _, _, sigs, index = small_index
+    with pytest.raises(TypeError, match="int32"):
+        build_index(jnp.asarray(np.zeros((8, 4), np.float32)))
+    with pytest.raises(resil.PoisonBatchError, match="negative"):
+        insert(index, np.asarray(sigs)[:, :1], np.array([-3]))
+    with pytest.raises(TypeError, match="int32"):
+        insert(index, np.zeros((8, 1), np.float32), np.array([40]))
+
+
+# ---------------------------------------------------------------- rebuild
+
+def test_rebuilder_validates_then_swaps(small_index):
+    _, _, sigs, _ = small_index
+    rb = resil.IndexRebuilder()
+    assert rb.submit(sigs, tail_cap=8)
+    rb.join(60)
+    status, idx, err = rb.take()
+    assert status == "ready" and err is None
+    assert idx.n_base == sigs.shape[1] and idx.tail_fill == 0
+    # handed over exactly once
+    assert rb.take()[0] == "idle"
+
+
+def test_rebuilder_failed_build_is_never_handed_over(small_index):
+    _, _, sigs, _ = small_index
+    rb = resil.IndexRebuilder()
+    with faults.injected({"serve.rebuild": resil.FaultSpec(at_calls=(0,))}):
+        rb.submit(sigs, tail_cap=8)
+        rb.join(60)
+    status, idx, err = rb.take()
+    assert status == "failed" and idx is None
+    assert isinstance(err, resil.InjectedFault)
+    assert rb.failures == 1
+
+
+def test_rebuilder_rejects_corrupt_build(small_index):
+    _, _, sigs, _ = small_index
+
+    def corrupt(idx):
+        bad = dataclasses.replace(
+            idx, sorted_ids=idx.sorted_ids.at[0, 0].set(idx.sorted_ids[0, 1]))
+        object.__setattr__(bad, "_tail_host", 0)
+        return bad
+
+    rb = resil.IndexRebuilder()
+    with faults.injected({"serve.rebuild.index":
+                          resil.FaultSpec(kind="corrupt", mutate=corrupt,
+                                          at_calls=(0,))}):
+        rb.submit(sigs, tail_cap=8)
+        rb.join(60)
+    status, idx, err = rb.take()
+    assert status == "failed" and idx is None
+    assert isinstance(err, resil.IndexValidationError)
+
+
+def test_rebuilder_latest_submission_wins(small_index):
+    _, _, sigs, _ = small_index
+    rb = resil.IndexRebuilder()
+    with faults.injected({"serve.rebuild":
+                          resil.FaultSpec(kind="stall", stall_s=0.2,
+                                          at_calls=(0,))}):
+        assert rb.submit(sigs, tail_cap=8)
+        # staged while busy: only the newest survives
+        assert not rb.submit(sigs[:, :10], tail_cap=8)
+        assert not rb.submit(sigs[:, :20], tail_cap=8)
+        rb.join(60)
+        status, idx, _ = rb.take()      # first build + restart of staged
+        assert status == "ready" and idx.n_base == sigs.shape[1]
+        rb.join(60)
+    status, idx, _ = rb.take()
+    assert status == "ready" and idx.n_base == 20   # latest staged won
+
+
+# ---------------------------------------------------------------- checkpoint
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_checkpoint_crash_mid_save_never_corrupts(tmp_path):
+    """The injected crash kills the save thread after the shard but before
+    the manifest — the dangling thread exception is the simulated crash,
+    hence the filterwarnings."""
+    d = str(tmp_path)
+    tree = {"a": np.arange(6).reshape(2, 3), "b": np.float32(1.5)}
+    checkpoint.save(d, tree, step=1, sync=True)
+    with faults.injected({"ckpt.save": resil.FaultSpec(at_calls=(0,))}):
+        checkpoint.save(d, tree, step=2, sync=True)   # dies before manifest
+    assert checkpoint.latest_step(d) == 1
+    restored, step = checkpoint.restore(d, tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]), tree["a"])
+    # the next save cleans the crash remnant and commits normally
+    checkpoint.save(d, tree, step=3, sync=True)
+    assert checkpoint.latest_step(d) == 3
+    assert not [f for f in __import__("os").listdir(d)
+                if f.startswith(".tmp-")]
+
+
+def test_checkpoint_torn_step_is_skipped_not_raised(tmp_path):
+    import os
+    d = str(tmp_path)
+    tree = {"a": np.arange(4), "b": np.ones((2, 2))}
+    checkpoint.save(d, tree, step=1, sync=True)
+    checkpoint.save(d, tree, step=2, sync=True)
+    os.remove(os.path.join(d, "step-00000002", "manifest.json"))   # torn
+    assert checkpoint.latest_step(d) == 1
+    _, step = checkpoint.restore(d, tree)
+    assert step == 1
+    with pytest.raises(FileNotFoundError, match="torn"):
+        checkpoint.restore(d, tree, step=2)
+    # a truncated shard is torn too, even with a manifest present
+    shard = os.path.join(d, "step-00000001",
+                         f"shard-{jax.process_index()}.npz")
+    with open(shard, "wb") as f:
+        f.write(b"\x00\x01")
+    assert checkpoint.latest_step(d) is None
+    assert checkpoint.try_restore(d, tree) is None
+
+
+# ---------------------------------------------------------------- WAL
+
+@pytest.fixture(scope="module")
+def online_state():
+    spec = dataclasses.replace(syn.MOVIELENS_LIKE, M=120, N=50, nnz=2000)
+    rows, cols, vals, _ = syn.generate(spec, seed=0)
+    sp = from_coo(rows, cols, vals, (spec.M, spec.N))
+    cfg = simlsh.SimLSHConfig(G=8, p=1, q=6)
+    key = jax.random.PRNGKey(0)
+    sigs, S = simlsh.encode(sp, cfg, key, return_accumulators=True)
+    JK = topk.topk_from_signatures(sigs, jax.random.PRNGKey(1), K=8,
+                                   band_cap=cfg.band_cap)
+    params = init_from_data(jax.random.PRNGKey(2), sp, 16, 8)
+    st = online.OnlineState(params=params, S=S, JK=JK, sp=sp,
+                            M=spec.M, N=spec.N, hash_key=key)
+    return st, cfg
+
+
+def _delta(st, M_new, N_new, seed, n=250):
+    rng = np.random.default_rng(seed)
+    nr = rng.integers(0, M_new, n).astype(np.int32)
+    nc = rng.integers(0, N_new, n).astype(np.int32)
+    pair = np.unique(nr.astype(np.int64) * N_new + nc)
+    old = set((np.asarray(st.sp.rows).astype(np.int64) * N_new
+               + np.asarray(st.sp.cols)).tolist())
+    pair = np.asarray([p for p in pair.tolist() if p not in old])
+    nr = (pair // N_new).astype(np.int32)
+    nc = (pair % N_new).astype(np.int32)
+    nv = rng.uniform(1, 5, nr.shape[0]).astype(np.float32)
+    return nr, nc, nv
+
+
+def _assert_states_bit_identical(a, b):
+    ta, tb = wal.state_tree(a), wal.state_tree(b)
+    for k in ta:
+        xa, xb = np.asarray(ta[k]), np.asarray(tb[k])
+        assert xa.dtype == xb.dtype and np.array_equal(xa, xb), k
+
+
+def test_wal_crash_mid_ingest_replays_bit_identical(online_state, tmp_path):
+    st0, cfg = online_state
+    hp = Hyper()
+    up = wal.OnlineUpdater(st0, cfg, hp, root=str(tmp_path), K=8,
+                           epochs=1, ckpt_every=2)
+    M, N = st0.M, st0.N
+    for i in range(2):          # one checkpointed, one WAL-only
+        M, N = M + 6, N + 3
+        nr, nc, nv = _delta(up.state, M, N, seed=100 + i)
+        up.update(nr, nc, nv, jax.random.PRNGKey(50 + i), M_new=M, N_new=N)
+    # crash between WAL append and the in-memory apply
+    M2, N2 = M + 4, N + 2
+    nr, nc, nv = _delta(up.state, M2, N2, seed=200)
+    pre_crash = up.state
+    with faults.injected({"online.update": resil.FaultSpec(at_calls=(0,))}):
+        with pytest.raises(resil.InjectedFault):
+            up.update(nr, nc, nv, jax.random.PRNGKey(99),
+                      M_new=M2, N_new=N2)
+    # recovery = newest complete checkpoint + full WAL replay; the logged
+    # entry of the crashed update completes it, so the result is
+    # bit-identical to the run that never crashed
+    rec = wal.OnlineUpdater.recover(str(tmp_path), cfg, hp, K=8, epochs=1,
+                                    ckpt_every=2)
+    ref = online.online_update(pre_crash, nr, nc, nv, cfg, hp,
+                               jax.random.PRNGKey(99), M_new=M2, N_new=N2,
+                               K=8, epochs=1)
+    assert rec.seq == 3
+    _assert_states_bit_identical(rec.state, ref)
+
+
+def test_wal_refuses_poison_before_logging(online_state, tmp_path):
+    st0, cfg = online_state
+    up = wal.OnlineUpdater(st0, cfg, Hyper(), root=str(tmp_path), K=8,
+                           epochs=1)
+    nr = np.array([1, 2], np.int32)
+    with pytest.raises(resil.PoisonBatchError):
+        up.update(nr, nr, np.array([np.nan, 1.0], np.float32),
+                  jax.random.PRNGKey(0), M_new=st0.M, N_new=st0.N)
+    assert up.wal.seqs() == []      # the redo log never saw the batch
+    assert up.seq == 0 and up.state is st0
+
+
+def test_wal_divergence_rollback_is_replay_stable(online_state, tmp_path):
+    st0, cfg = online_state
+    hp = Hyper()
+    guard = resil.GuardConfig(max_ratio=1e-9)   # trips on any real update
+    up = wal.OnlineUpdater(st0, cfg, hp, root=str(tmp_path), K=8,
+                           epochs=1, guard=guard)
+    M2, N2 = st0.M + 6, st0.N + 3
+    nr, nc, nv = _delta(st0, M2, N2, seed=5)
+    with pytest.raises(resil.DivergenceError):
+        up.update(nr, nc, nv, jax.random.PRNGKey(0), M_new=M2, N_new=N2)
+    assert up.state is st0          # rollback = keep what you had
+    assert up.seq == 1              # but the entry is logged
+    rec = wal.OnlineUpdater.recover(str(tmp_path), cfg, hp, K=8, epochs=1,
+                                    base_state=st0, guard=guard)
+    assert rec.seq == 1             # replay re-trips and stays rejected
+    _assert_states_bit_identical(rec.state, st0)
+
+
+def test_wal_recover_refuses_mismatched_static_args(online_state, tmp_path):
+    st0, cfg = online_state
+    hp = Hyper()
+    up = wal.OnlineUpdater(st0, cfg, hp, root=str(tmp_path), K=8, epochs=1,
+                           ckpt_every=100)
+    M2, N2 = st0.M + 6, st0.N + 3
+    nr, nc, nv = _delta(st0, M2, N2, seed=9)
+    up.update(nr, nc, nv, jax.random.PRNGKey(0), M_new=M2, N_new=N2)
+    with pytest.raises(ValueError, match="static arguments"):
+        wal.OnlineUpdater.recover(str(tmp_path), cfg, hp, K=8, epochs=2,
+                                  base_state=st0)
+
+
+# ---------------------------------------------------------------- service
+
+@pytest.fixture(scope="module")
+def serving():
+    """Small serving stack; the LAST user has no interactions (the
+    zero-candidate edge case) and the tail is tiny so ingest overflows."""
+    rng = np.random.default_rng(3)
+    M, N = 96, 64
+    rows = np.repeat(np.arange(M - 1), 4).astype(np.int32)
+    cols = rng.integers(0, N, rows.shape[0]).astype(np.int32)
+    vals = rng.integers(1, 6, rows.shape[0]).astype(np.float32)
+    sp = from_coo(rows, cols, vals, (M, N))
+    cfg = simlsh.SimLSHConfig(G=8, p=2, q=8)
+    sigs = simlsh.encode(sp, cfg, jax.random.PRNGKey(0))
+    index = build_index(sigs, tail_cap=8)
+    params = init_from_data(jax.random.PRNGKey(1), sp, 16, 8)
+    return sp, sigs, index, params
+
+
+def _service(serving, **kw):
+    sp, sigs, index, params = serving
+    defaults = dict(topn=5, micro_batch=8, C=32, n_seeds=4, cap=8,
+                    n_popular=16)
+    defaults.update(kw)
+    return RecsysService(params, index, sp, ServeConfig(**defaults)).warmup()
+
+
+def test_service_overload_sheds_in_submission_order(serving):
+    svc = _service(serving, max_pending=12)
+    svc.submit(np.arange(30, dtype=np.int32))    # burst 30 > bound 12
+    svc.flush()
+    res = svc.take_results()
+    st = svc.stats()
+    assert st["shed"] == 18 and st["degraded"] == 18
+    assert st["users"] == 30, "every user answered — shed ≠ lost"
+    all_u = np.concatenate([r[0] for r in res])
+    assert all_u.tolist() == list(range(30)), \
+        "degraded pseudo-flushes must keep submission order"
+    # degraded rows answer with the popularity shortlist, bias-scored
+    pop = np.asarray(svc.popular)[:5]
+    np.testing.assert_array_equal(res[0][2][0], pop)
+    mu = float(svc.params.mu)
+    b = np.asarray(svc.params.b)
+    bh = np.asarray(svc.params.bh)
+    np.testing.assert_allclose(res[0][1][0], mu + b[0] + bh[pop], rtol=1e-6)
+
+
+def test_service_deadline_shedding_under_stall(serving):
+    """An injected stall delays the flush; requests that waited past the
+    deadline are shed rather than queued behind the stall."""
+    svc = _service(serving, deadline_s=0.02)
+    with faults.injected({"serve.flush":
+                          resil.FaultSpec(kind="stall", stall_s=0.05,
+                                          at_calls=(0,))}):
+        # one burst of two micro-batches: flush 0 stalls 50 ms while users
+        # 8-15 sit in the queue; by flush 1 they are past the deadline
+        svc.submit(np.arange(16, dtype=np.int32))
+        svc.flush()
+    st = svc.stats()
+    res = svc.take_results()
+    assert st["shed"] == 8, "stall must shed, not stretch the queue"
+    assert np.concatenate([r[0] for r in res]).tolist() == list(range(16))
+
+
+def test_service_drops_when_no_popular_fallback(serving):
+    svc = _service(serving, n_popular=0, max_pending=4)
+    svc.submit(np.arange(12, dtype=np.int32))
+    svc.flush()
+    st = svc.stats()
+    served = sum(r[0].shape[0] for r in svc.take_results())
+    assert st["dropped"] == 8 and served == 4
+
+
+def test_service_zero_candidate_user_serves_sentinels(serving):
+    sp, _, _, _ = serving
+    svc = _service(serving, n_popular=0)
+    lonely = sp.M - 1            # no interactions → no seeds → no candidates
+    svc.submit(np.full(8, lonely, np.int32))
+    svc.flush()
+    (users, scores, items), = svc.take_results()
+    assert users.shape == (8,) and items.shape == (8, 5)
+    assert (items == SENTINEL).all(), \
+        "a user with no candidates gets explicit SENTINELs, not garbage"
+
+
+def test_service_popular_fallback_covers_zero_candidate_user(serving):
+    sp, _, _, _ = serving
+    svc = _service(serving)      # n_popular=16
+    lonely = sp.M - 1
+    svc.submit(np.full(8, lonely, np.int32))
+    svc.flush()
+    (_, _, items), = svc.take_results()
+    pop = set(np.asarray(svc.popular).tolist())
+    got = set(items[0].tolist()) - {int(SENTINEL)}
+    assert got and got <= pop, \
+        "with a shortlist, a candidate-less user is served popular items"
+
+
+def test_service_flush_failure_falls_back_to_exact_full_scoring(serving):
+    svc = _service(serving, n_popular=0, topn=3)
+    with faults.injected({"serve.flush": resil.FaultSpec(at_calls=(0,))}):
+        svc.submit(np.arange(8, dtype=np.int32))
+        svc.flush()
+    st = svc.stats()
+    (users, scores, items), = svc.take_results()
+    assert st["fallbacks"] == 1
+    p = svc.params
+    dense = (float(p.mu) + np.asarray(p.b)[users][:, None]
+             + np.asarray(p.bh)[None, :]
+             + np.asarray(p.U)[users] @ np.asarray(p.V).T)
+    np.testing.assert_array_equal(items[:, 0], np.argmax(dense, axis=1))
+
+
+def test_service_quarantines_poison_ingest(serving):
+    sp, sigs, _, _ = serving
+    svc = _service(serving)
+    n0 = svc.index.n_items
+    with pytest.raises(resil.PoisonBatchError, match="int32"):
+        svc.ingest(np.zeros((8, 1), np.float32), np.array([sp.N]))
+    with pytest.raises(resil.PoisonBatchError, match="negative"):
+        svc.ingest(np.asarray(sigs)[:, :1], np.array([-1]))
+    with pytest.raises(resil.PoisonBatchError, match="duplicate"):
+        svc.ingest(np.asarray(sigs)[:, :2], np.array([sp.N, sp.N]))
+    assert svc.stats()["quarantined"] == 3
+    assert svc.index.n_items == n0, "quarantined batches touch no state"
+
+
+def test_service_background_rebuild_swap_and_rollback(serving):
+    sp, sigs, index, params = serving
+    full = jnp.concatenate([sigs, sigs[:, :12]], axis=1)
+    new_ids = jnp.arange(sp.N, sp.N + 12, dtype=jnp.int32)
+
+    # failure path first: every build dies → bounded retries → rollback
+    svc = _service(serving)
+    with faults.injected({"serve.rebuild":
+                          resil.FaultSpec(at_calls=(0, 1, 2))}):
+        svc.ingest(sigs[:, :12], new_ids, full_sigs=full)   # 12 > tail 8
+        assert svc.stats()["index_stale"]
+        for _ in range(6):
+            svc._rebuilder.join(60)
+            svc.flush()
+    assert svc.index.n_items == sp.N, "failed rebuild must never swap in"
+    assert svc.obs.counter("serve.rebuild.gave_up") == 1
+    # the service still answers (degraded: index v, stale catalog)
+    svc.submit(np.arange(8, dtype=np.int32))
+    svc.flush()
+    assert len(svc.take_results()) == 1
+
+    # success path: same overflow, no faults → validated v+1 swaps in
+    svc2 = _service(serving)
+    svc2.ingest(sigs[:, :12], new_ids, full_sigs=full)
+    svc2._rebuilder.join(60)
+    svc2.submit(np.arange(8, dtype=np.int32))   # poll at the loop edge
+    svc2.flush()
+    assert svc2.index.n_items == sp.N + 12
+    assert not svc2.stats()["index_stale"]
+    assert svc2.obs.counter("serve.rebuild.swaps") == 1
+
+
+def test_service_corrupt_rebuild_is_rejected_by_validation(serving):
+    sp, sigs, _, _ = serving
+    full = jnp.concatenate([sigs, sigs[:, :12]], axis=1)
+
+    def corrupt(idx):
+        bad = dataclasses.replace(
+            idx, sorted_ids=idx.sorted_ids.at[0, 0].set(idx.sorted_ids[0, 1]))
+        object.__setattr__(bad, "_tail_host", 0)
+        return bad
+
+    svc = _service(serving)
+    with faults.injected({"serve.rebuild.index":
+                          resil.FaultSpec(kind="corrupt", mutate=corrupt,
+                                          at_calls=(0, 1, 2))}):
+        svc.ingest(sigs[:, :12], jnp.arange(sp.N, sp.N + 12, dtype=jnp.int32),
+                   full_sigs=full)
+        for _ in range(6):
+            svc._rebuilder.join(60)
+            svc.flush()
+    assert svc.index.n_items == sp.N, \
+        "a corrupt build must be caught by the validation gate, never served"
+    assert svc._rebuilder.failures == 3
+    assert resil.validate_index(svc.index) == []

@@ -22,6 +22,9 @@ Checks per document (dependency-free, stdlib json only):
     counters non-negative — a NaN that sneaks into a JSON would otherwise
     pass every `>=` floor (NaN comparisons are False, so `--check`
     style gates silently approve it);
+  * ``fault_scenario`` (serve, required): the ISSUE 7 fault arm must ship
+    with every serve bench — ``shed_rate``/``recall_under_fault`` in
+    [0, 1], ``recover_seconds`` ≥ 0, a ``recovered`` bool;
   * ``pr1_same_window`` (serve, optional): when present, every size entry
     must carry the re-measured baseline QPS fields — a same-window claim
     without numbers is not a claim.
@@ -150,6 +153,19 @@ def check_serve(doc) -> list:
         if not isinstance(e.get("scorer_hlo_cube_free"), bool):
             errs.append(f"{p}: scorer_hlo_cube_free missing/not bool")
         _obs_overhead(e, p, errs, time_like=False)
+    fs = doc.get("fault_scenario")
+    if not isinstance(fs, dict):
+        errs.append("fault_scenario: missing section (ISSUE 7: every serve "
+                    "bench run includes the fault arm — shed rate, recall "
+                    "under fault, time-to-recover)")
+    else:
+        _num(fs, "shed_rate", lo=0.0, hi=1.0, errs=errs)
+        _num(fs, "recover_seconds", lo=0.0, errs=errs)
+        _num(fs, "recall_under_fault", lo=0.0, hi=1.0, errs=errs)
+        _num(fs, "recall_fault_free", lo=0.0, hi=1.0, errs=errs)
+        _num(fs, "p99_ratio", lo=0.0, errs=errs)
+        if not isinstance(fs.get("recovered"), bool):
+            errs.append("fault_scenario: recovered missing/not bool")
     pr1 = doc.get("pr1_same_window")
     if pr1 is not None:
         if not isinstance(pr1, dict):
