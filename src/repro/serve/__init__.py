@@ -2,23 +2,31 @@
 
 Turns the training-side simLSH signatures into a production retrieval
 stack: persistent bucketed index (`index`), batched candidate retrieval
-(`retrieve`), and a micro-batching serving loop with candidate-only
-scoring through the fused Pallas kernel (`service`).  The serving loop
-is hardened by `repro.resil`: bounded admission with load shedding,
-degraded popularity fallback, background validate-then-swap index
-rebuilds, and poison-batch quarantine (docs/ARCHITECTURE.md §8).
+(`retrieve` — the legacy pool+dedup pipeline and the window-walk path
+that feeds the `lsh_retrieve` kernel), and a micro-batching serving loop
+with candidate-only scoring through the fused Pallas kernels
+(`service`).  The serving loop is hardened by `repro.resil`: bounded
+admission with load shedding, degraded popularity fallback, background
+validate-then-swap index rebuilds, and poison-batch quarantine
+(docs/ARCHITECTURE.md §8).
 """
 from repro.serve.index import (LSHIndex, build_index, insert, lookup_items,
-                               lookup_signatures, needs_rebuild, rebuild)
+                               lookup_signatures, needs_rebuild,
+                               padded_flat_ids, rebuild, window_slices)
 from repro.serve.retrieve import (compact_pool, dedup_candidates,
-                                  retrieve_for_items, retrieve_for_users,
-                                  seed_items)
+                                  enumerate_windows, retrieve_for_items,
+                                  retrieve_for_users, seed_items, tail_hits,
+                                  walk_candidates, window_descriptors)
 from repro.serve.service import (RecsysService, ServeConfig, full_topn,
-                                 popular_shortlist, recommend_candidates)
+                                 popular_shortlist, recommend_candidates,
+                                 recommend_walked, recommend_walked_kernel)
 
 __all__ = [
     "LSHIndex", "build_index", "insert", "lookup_items", "lookup_signatures",
-    "needs_rebuild", "rebuild", "compact_pool", "dedup_candidates",
-    "retrieve_for_items", "retrieve_for_users", "seed_items", "RecsysService",
-    "ServeConfig", "full_topn", "popular_shortlist", "recommend_candidates",
+    "needs_rebuild", "padded_flat_ids", "rebuild", "window_slices",
+    "compact_pool", "dedup_candidates", "enumerate_windows",
+    "retrieve_for_items", "retrieve_for_users", "seed_items", "tail_hits",
+    "walk_candidates", "window_descriptors", "RecsysService", "ServeConfig",
+    "full_topn", "popular_shortlist", "recommend_candidates",
+    "recommend_walked", "recommend_walked_kernel",
 ]

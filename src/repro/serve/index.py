@@ -234,6 +234,53 @@ def lookup_signatures(index: LSHIndex, qsigs: jax.Array, *,
     return jnp.concatenate([core, tail], axis=1)
 
 
+@partial(jax.jit, static_argnames=("cap",))
+def window_slices(index: LSHIndex, item_ids: jax.Array, *, cap: int):
+    """Per-(item, band) bucket-window *descriptors* instead of gathered ids.
+
+    item_ids [B, S] → (starts, lens), both [B, q·S] int32.  ``starts`` are
+    flat positions into ``sorted_ids.reshape(-1)`` (band b's slots occupy
+    [b·N, (b+1)·N)); ``lens`` ∈ [0, cap] is the number of valid slots from
+    the start.  Same geometry as `lookup_items`: the window is centred on
+    the item's own slot and clipped to its bucket, so it always contains
+    the item itself.  Invalid (SENTINEL / out-of-range / tail-resident)
+    items get length 0.
+
+    This is the DMA contract of the `lsh_retrieve` kernel: each descriptor
+    is one static ``cap``-sized async copy out of HBM, masked to ``lens``
+    in VMEM.  A copy may therefore read up to ``cap − len`` slots past the
+    window (and, in the last band's last bucket, past the array) — consumers
+    must read ``sorted_ids`` through `padded_flat_ids`, which appends
+    ``cap`` SENTINEL slots so the overrun is always in-bounds and inert.
+    """
+    B, S = item_ids.shape
+    q, Nn = index.q, index.n_base
+    valid = (item_ids != SENTINEL) & (item_ids >= 0) & (item_ids < Nn)
+    safe = jnp.clip(item_ids, 0, Nn - 1)
+    base = (jnp.arange(q, dtype=jnp.int32) * Nn)[:, None, None]    # [q,1,1]
+    slot = index.slot_of.reshape(-1)[base + safe[None]]            # [q,B,S]
+    fslot = base + slot
+    lo = index.bucket_lo.reshape(-1)[fslot]
+    hi = index.bucket_hi.reshape(-1)[fslot]
+    st = jnp.clip(slot - cap // 2, lo, jnp.maximum(hi - cap, lo))
+    ln = jnp.where(valid[None], jnp.minimum(st + cap, hi) - st, 0)
+    st = jnp.where(valid[None], st + base, 0)
+    starts = jnp.transpose(st, (1, 0, 2)).reshape(B, q * S)
+    lens = jnp.transpose(ln, (1, 0, 2)).reshape(B, q * S)
+    return starts, lens
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def padded_flat_ids(index: LSHIndex, *, cap: int) -> jax.Array:
+    """``sorted_ids`` flattened to [q·N + cap] with a SENTINEL apron, so a
+    static ``cap``-wide read at any `window_slices` start stays in-bounds
+    (the apron slots hash to padding in the dedup even if a mask slips).
+    Cache the result per index version — it copies the whole id plane."""
+    return jnp.concatenate(
+        [index.sorted_ids.reshape(-1),
+         jnp.full((cap,), SENTINEL, jnp.int32)])
+
+
 def _tail_matches(index: LSHIndex, tsig: jax.Array, qsig: jax.Array, *,
                   width: int) -> jax.Array:
     """Up to ``width`` tail ids whose band signature equals qsig.  [B] →

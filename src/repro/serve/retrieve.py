@@ -257,3 +257,181 @@ def retrieve_for_items(index: LSHIndex, item_ids: jax.Array, *, cap: int,
     """Item-to-item retrieval (related-items widgets): [B] → [B, C]."""
     mates = lookup_items(index, item_ids, cap=cap)
     return dedup_candidates(mates, C=C)
+
+
+# ---------------------------------------------------------------------------
+# Window-descriptor retrieval (the "walk" path).
+#
+# The functions above materialise every bucket window as gathered ids and
+# dedup with a [B, ~1100]-wide sort — both show up as the hot half of a
+# flush.  The walk path keeps retrieval symbolic as long as possible:
+# buckets become *interval descriptors* (start slot + count), overlapping
+# windows of the same band are merged arithmetically (so the union is
+# duplicate-free within a band by construction), and a shared per-user slot
+# budget is enumerated across all bands at once.  Cross-band duplicates are
+# the only ones left, and they are cheap enough to defer all the way to
+# top-n selection (`service` masks them there) or to fold in VMEM inside
+# the `lsh_retrieve` kernel.  No [B, pool]-wide sort ever runs on the host.
+# ---------------------------------------------------------------------------
+
+# interval sort key for invalid seeds: larger than any flat slot position
+# (q·N < 2³⁰ by the build_index id bound), so they sink to the tail
+_BIG = jnp.int32(1 << 30)
+
+
+def _sortpairs_bitonic(st, en):
+    """Ascending co-sort of (start, end) interval pairs along the last
+    axis — a static bitonic network.  The last axis is tiny (S seeds), so
+    ~log²S/2 compare-exchange stages of full-tensor min/max beat the
+    generic argsort+gather lowering by ~2.5× on CPU.  Requires a
+    power-of-two last axis (callers pad with `_BIG` sink intervals)."""
+    W = st.shape[-1]
+    assert W & (W - 1) == 0, "bitonic width must be a power of two"
+    lead = st.shape[:-1]
+    k = 2
+    while k <= W:
+        j = k // 2
+        while j >= 1:
+            shp = lead + (W // (2 * j), 2, j)
+            sa, ea = st.reshape(shp), en.reshape(shp)
+            a_s, b_s = sa[..., 0, :], sa[..., 1, :]
+            a_e, b_e = ea[..., 0, :], ea[..., 1, :]
+            # element index of a[..., g, t] is g·2j + t; ascending block
+            # iff that index has bit k clear (standard bitonic direction)
+            idx = (jax.lax.broadcasted_iota(jnp.int32, (W // (2 * j), j), 0)
+                   * (2 * j)
+                   + jax.lax.broadcasted_iota(jnp.int32, (W // (2 * j), j), 1))
+            up = ((idx & k) == 0).reshape((1,) * len(lead) + (W // (2 * j), j))
+            swap = (a_s > b_s) == up
+            st = jnp.stack([jnp.where(swap, b_s, a_s),
+                            jnp.where(swap, a_s, b_s)],
+                           axis=-2).reshape(lead + (W,))
+            en = jnp.stack([jnp.where(swap, b_e, a_e),
+                            jnp.where(swap, a_e, b_e)],
+                           axis=-2).reshape(lead + (W,))
+            j //= 2
+        k *= 2
+    return st, en
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def window_descriptors(index: LSHIndex, seeds: jax.Array, *, cap: int):
+    """Merged per-(user, band) bucket-window intervals.
+
+    seeds [B, S] → (starts, counts), both [B, q·S] int32.  Each seed
+    contributes its `lookup_items`-geometry window (centred on its slot,
+    clipped to its bucket, ≤ ``cap`` wide); windows of the *same band* are
+    sorted by start and overlaps are trimmed (interval k begins at
+    ``max(start_k, max(end_0..k-1))``), so within a band every slot
+    appears at most once.  ``starts`` are flat positions into
+    ``sorted_ids.reshape(-1)``; ``counts`` may be 0 (fully-shadowed or
+    invalid windows).  Intervals arrive band-major but NOT globally
+    sorted — consumers only need the per-band disjointness.
+    """
+    B, S = seeds.shape
+    q, Nn = index.q, index.n_base
+    valid = (seeds != SENTINEL) & (seeds >= 0) & (seeds < Nn)
+    safe = jnp.clip(seeds, 0, Nn - 1)
+    base = (jnp.arange(q, dtype=jnp.int32) * Nn)[:, None, None]    # [q,1,1]
+    slot = index.slot_of.reshape(-1)[base + safe[None]]            # [q,B,S]
+    fslot = base + slot
+    lo = index.bucket_lo.reshape(-1)[fslot]
+    hi = index.bucket_hi.reshape(-1)[fslot]
+    st = jnp.clip(slot - cap // 2, lo, jnp.maximum(hi - cap, lo))
+    en = jnp.minimum(st + cap, hi)
+    st = jnp.where(valid[None], st, _BIG)
+    en = jnp.where(valid[None], en, _BIG)
+    Sp = 1 << max(S - 1, 0).bit_length()       # bitonic needs a pow-2 width
+    if Sp > S:
+        pad = jnp.full((q, B, Sp - S), _BIG, jnp.int32)
+        st = jnp.concatenate([st, pad], axis=2)
+        en = jnp.concatenate([en, pad], axis=2)
+    st, en = _sortpairs_bitonic(st, en)
+    # ascending sort sinks the _BIG pads past every real window, so the
+    # first S entries are exactly the real (+invalid) intervals
+    st, en = st[:, :, :S], en[:, :, :S]
+    run_en = jax.lax.cummax(en, axis=2)
+    pmax = jnp.concatenate(
+        [jnp.zeros((q, B, 1), jnp.int32), run_en[:, :, :-1]], axis=2)
+    ns = jnp.maximum(st, pmax)
+    cnt = jnp.maximum(jnp.minimum(en, _BIG) - ns, 0)
+    cnt = jnp.where(st >= _BIG, 0, cnt)
+    ns = jnp.where(st >= _BIG, 0, ns + base)
+    starts = jnp.transpose(ns, (1, 0, 2)).reshape(B, q * S)
+    counts = jnp.transpose(cnt, (1, 0, 2)).reshape(B, q * S)
+    return starts, counts
+
+
+@partial(jax.jit, static_argnames=("budget",))
+def enumerate_windows(starts: jax.Array, counts: jax.Array, *,
+                      budget: int) -> jax.Array:
+    """Expand interval descriptors into flat slot positions under a shared
+    per-user budget.  (starts, counts) [B, I] → pos [B, budget] int32, −1
+    past each user's total.  Users whose intervals sum past ``budget``
+    are truncated in interval order (later intervals dropped first).
+
+    Scatter-fill enumeration: each nonempty interval scatters its *index*
+    at its output offset (cumsum of counts), a `cummax` extends ownership
+    forward — interval indices are monotone in offset, so the running max
+    is exactly "which interval owns this slot" — and a gather of the
+    owner's (start − offset) turns slot rank into a flat position.  This
+    is O(B·(I + budget)) elementwise work; `jnp.repeat` lowers to the
+    same shape but ~40% slower on CPU, and a sort-based expansion costs
+    more than the dedup sort this path removes.
+    """
+    B, I = starts.shape
+    coff = jnp.cumsum(counts, axis=1)
+    coff_ex = coff - counts
+    total = coff[:, -1:]
+    val = starts - coff_ex                       # per-interval: pos = val + d
+    tgt = jnp.where(counts > 0, coff_ex, budget)           # OOB → dropped
+    jidx = jnp.broadcast_to(jnp.arange(I, dtype=jnp.int32)[None, :], (B, I))
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, I))
+    own = jnp.zeros((B, budget), jnp.int32)
+    own = own.at[bidx, tgt].max(jidx, mode="drop")
+    own = jax.lax.cummax(own, axis=1)
+    d = jnp.arange(budget, dtype=jnp.int32)[None, :]
+    pos = jnp.take_along_axis(val, own, axis=1) + d
+    return jnp.where(d < total, pos, -1)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def tail_hits(index: LSHIndex, seeds: jax.Array, *, k: int = 0) -> jax.Array:
+    """Online-insert tail items colliding with any seed in any band.
+    seeds [B, S] → [B, T] ids, SENTINEL where no collision.  One scan per
+    user (not per seed) — same trick as `candidate_pool`'s tail block.
+
+    ``k`` > 0 restricts the scan (and the output width) to the first k
+    tail slots: the tail fills strictly in insertion order, so every slot
+    ≥ `tail_fill` is empty and scanning it — let alone *scoring* its
+    SENTINEL column downstream — is pure waste.  Callers pass a host-side
+    occupancy bound rounded up (service rounds to 16) so retraces stay
+    rare.  k = 0 scans the whole buffer."""
+    T = index.tail_cap
+    k = T if k <= 0 else min(k, T)
+    qsigs = _sig_of_items(index, seeds)                        # [q, B, S]
+    hit = jnp.any(
+        qsigs[..., None] == index.tail_sigs[:, :k][:, None, None, :],
+        axis=(0, 2))                                           # [B, k]
+    return jnp.where(hit, index.tail_ids[None, :k], SENTINEL)
+
+
+@partial(jax.jit, static_argnames=("n_seeds", "cap", "budget", "window"))
+def walk_candidates(index: LSHIndex, sp: SparseMatrix, user_ids: jax.Array,
+                    *, n_seeds: int, cap: int, budget: int,
+                    window: int = 64):
+    """The walk path end to end: seeds → merged descriptors → enumerated
+    slots → gathered ids.  [B] → (ids [B, budget], seeds [B, n_seeds]).
+
+    ``ids`` may contain *cross-band* duplicates (each band is internally
+    duplicate-free); callers either dedup at top-n selection
+    (`service._select_topn_masked`) or route through the `lsh_retrieve`
+    kernel.  Seeds are NOT appended — every valid seed's window contains
+    the seed itself, so the union already covers them.
+    """
+    seeds = seed_items(sp, user_ids, n_seeds=n_seeds, window=window)
+    starts, counts = window_descriptors(index, seeds, cap=cap)
+    pos = enumerate_windows(starts, counts, budget=budget)
+    flat = index.sorted_ids.reshape(-1)
+    ids = jnp.where(pos >= 0, flat[jnp.maximum(pos, 0)], SENTINEL)
+    return ids, seeds

@@ -56,14 +56,18 @@ from repro.core import model, simlsh
 from repro.core.model import Params
 from repro.core.topk import SENTINEL
 from repro.data.sparse import SparseMatrix
+from repro.kernels.candidate_score.kernel import NEG
 from repro.kernels.candidate_score.ops import score_candidates
+from repro.kernels.lsh_retrieve.kernel import lsh_retrieve_topc
 from repro.resil import faults
 from repro.resil.rebuild import IndexRebuilder
 from repro.resil.validate import (PoisonBatchError, check_accumulators,
                                   check_ingest_batch)
 from repro.serve import index as lsh_index
-from repro.serve.retrieve import (candidate_pool, finalize_candidates,
-                                  retrieve_for_users)
+from repro.serve.retrieve import (candidate_pool, enumerate_windows,
+                                  finalize_candidates, retrieve_for_users,
+                                  seed_items, tail_hits, walk_candidates,
+                                  window_descriptors)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +88,30 @@ class ServeConfig:
     pool_width: int = 0       # generic pre-dedup pool compaction width
                               # (0 = off — a wash on CPU, see
                               # retrieve.compact_pool; knob for TPU)
+    band_budget: int = 512    # > 0 = the window-walk retrieval path (the
+                              # default pipeline): merged per-band bucket
+                              # intervals enumerated under this shared
+                              # per-user slot budget
+                              # (retrieve.walk_candidates) — no host-side
+                              # dedup sort; duplicates are folded at top-n
+                              # selection (CPU) or in the lsh_retrieve
+                              # kernel's VMEM (accelerators).  0 = legacy
+                              # pool+dedup retrieval (kept as the exact
+                              # oracle).  Size it near the p90
+                              # merged-interval mass (~q·n_seeds·3 at
+                              # cap=8 on zipf catalogs) — budget
+                              # truncation drops whole trailing windows,
+                              # which costs recall fast
+    route_full_below: int = 0 # candidate-mode routing escape hatch: serve
+                              # via exact full_topn when the catalog has at
+                              # most this many items (candidate retrieval
+                              # has a fixed per-user cost that exceeds the
+                              # O(N) scan on small catalogs — measured
+                              # crossover ≈ 48·C items on CPU).  -1 = that
+                              # auto threshold; 0 = off (the default: tiny-
+                              # catalog tests rely on candidate mode
+                              # answering strictly from retrieved
+                              # candidates)
     # resilience knobs (ISSUE 7)
     max_pending: int = 0      # admission bound on queued users (0 = off);
                               # overflow sheds the *oldest* chunks into the
@@ -101,6 +129,14 @@ class ServeConfig:
                               # index keeps serving either way)
     # kernel knobs
     tile_b: int = 8
+    walk_tile_b: int = 16     # scan tile for the walk path's pool scoring
+                              # (pure XLA gather+einsum; distinct from the
+                              # Pallas kernel's tile_b).  16 won a paired
+                              # interleaved A/B against 32 at B=256, W≈600
+                              # on CPU — non-interleaved runs flip the
+                              # verdict inside the ±25% container noise.
+                              # Batches are padded up to a multiple, so
+                              # any B works
     interpret: bool | None = None  # None = auto (interpret only on CPU);
                                    # never leave True on TPU — it would run
                                    # the hot path in the Pallas interpreter
@@ -158,11 +194,152 @@ def recommend_candidates(planes: model.ServePlanes, index, sp, user_ids,
                                 tile_b=tile_b, interpret=interpret, impl=impl)
 
 
+def _pool_scores(urow, plane, cand, *, tile_b: int):
+    """Scores of a [B, W] id pool with duplicates intact — tiled
+    gather+einsum `lax.scan` (the candidate_score ref idiom: per-tile rows
+    stay cache-resident, no [B, W, F] cube).  SENTINEL slots score NEG."""
+    B, W = cand.shape
+    F = plane.shape[1] - 1
+
+    def tile(carry, args):
+        u, c = args
+        rows = plane[jnp.clip(c, 0, plane.shape[0] - 1)]
+        s = (jnp.einsum("bf,bcf->bc", u[:, :F], rows[..., :F])
+             + rows[..., F] + u[:, F][:, None])
+        return carry, jnp.where(c == SENTINEL, NEG, s)
+
+    _, s = jax.lax.scan(
+        tile, 0, (urow.reshape(B // tile_b, tile_b, F + 1),
+                  cand.reshape(B // tile_b, tile_b, W)))
+    return s.reshape(B, W)
+
+
+def _score_pool(planes: model.ServePlanes, user_ids, cand, popular, *,
+                tile_b: int):
+    """Walked pool + popularity shortlist → (scores [B, W(+P)],
+    cand [B, W(+P)]).  The shortlist is batch-constant, so its scores are
+    ONE [B, F]·[F, P] matmul — never a per-user gather."""
+    B = cand.shape[0]
+    F = planes.F
+    pad = (-B) % tile_b
+    urow = planes.row[user_ids].at[:, F].add(planes.mu)
+    if pad:
+        urow = jnp.pad(urow, ((0, pad), (0, 0)))
+        cand = jnp.pad(cand, ((0, pad), (0, 0)),
+                       constant_values=int(SENTINEL))
+    s = _pool_scores(urow, planes.col, cand, tile_b=tile_b)[:B]
+    cand = cand[:B]
+    urow = urow[:B]
+    if popular is None:
+        return s, cand
+    prow = planes.col[popular]                                   # [P, F+1]
+    ps = (urow[:, :F] @ prow[:, :F].T
+          + prow[None, :, F] + urow[:, F][:, None])
+    cand = jnp.concatenate(
+        [cand, jnp.broadcast_to(popular[None, :], (B, popular.shape[0]))],
+        axis=1)
+    return jnp.concatenate([s, ps], axis=1), cand
+
+
+def _select_topn_masked(s, cand, *, topn: int):
+    """Duplicate-masked top-n over a pool that was never deduplicated.
+
+    n rounds of full-width argmax; each round masks every slot holding
+    the picked *id*, so cross-band duplicates (and the popular∩walk
+    overlap) collapse here, at O(n·W) elementwise cost, instead of in a
+    [B, W] sort.  Full width is deliberate: a `top_k` slack only helps
+    when the slack holds n distinct ids, and on zipf catalogs it usually
+    does not — one id can occupy a slot in *every* band, and the measured
+    rank of the 10th distinct id is p50 ≈ 4·topn, max ≈ 8·topn (N=100k,
+    q=10), so a slack path degrades into an always-firing full-width
+    fallback that costs strictly more than starting there.  Ties pick the
+    lowest slot (`argmax`'s first-index rule), so the returned id *set*
+    matches dedup-then-score exactly; only the order among equal-scored
+    distinct ids can differ from a hashed-dedup pipeline."""
+    bi = jnp.arange(s.shape[0])
+    outs, outi = [], []
+    for _ in range(topn):
+        i = jnp.argmax(s, axis=1)
+        sv = s[bi, i]
+        picked = cand[bi, i]
+        outs.append(sv)
+        # an exhausted row (sv ≤ NEG) emits SENTINEL; masking `picked`
+        # below is then harmless — every remaining score is already NEG
+        outi.append(jnp.where(sv > NEG, picked, SENTINEL))
+        s = jnp.where(cand == picked[:, None], NEG, s)
+    return jnp.stack(outs, 1), jnp.stack(outi, 1)
+
+
+@partial(jax.jit,
+         static_argnames=("n_seeds", "cap", "budget", "window", "tail_k",
+                          "topn", "tile_b"))
+def recommend_walked(planes: model.ServePlanes, index, sp, user_ids,
+                     popular, *, n_seeds: int, cap: int, budget: int,
+                     window: int, tail_k: int, topn: int, tile_b: int):
+    """The walk-path hot path as ONE jitted program (CPU/XLA flavour of
+    the `lsh_retrieve` fusion): window descriptors → budgeted slot
+    enumeration → pool scoring with duplicates intact → duplicate-masked
+    top-n.  No [B, pool] dedup sort anywhere — the only sorts left are
+    the static bitonic network over each band's S intervals and the
+    argmax tournament inside selection.  ``tail_k`` is the static tail
+    scan width (`RecsysService._tail_k`); 0 skips the tail entirely."""
+    with jax.named_scope("serve.flush.retrieve"):
+        ids, seeds = walk_candidates(index, sp, user_ids, n_seeds=n_seeds,
+                                     cap=cap, budget=budget, window=window)
+        if tail_k:
+            ids = jnp.concatenate(
+                [ids, tail_hits(index, seeds, k=tail_k)], axis=1)
+    with jax.named_scope("serve.flush.score"):
+        s, cand = _score_pool(planes, user_ids, ids, popular, tile_b=tile_b)
+    with jax.named_scope("serve.flush.select"):
+        return _select_topn_masked(s, cand, topn=topn)
+
+
+@partial(jax.jit,
+         static_argnames=("n_seeds", "cap", "C", "window", "tail_scan",
+                          "topn", "tile_b", "interpret", "impl"))
+def recommend_walked_kernel(planes: model.ServePlanes, index, sp, user_ids,
+                            popular, ids_flat, *, n_seeds: int, cap: int,
+                            C: int, window: int, tail_scan: bool, topn: int,
+                            tile_b: int, interpret: bool, impl: str):
+    """Accelerator flavour of the walk path: the `lsh_retrieve` kernel
+    walks + dedups bucket windows in VMEM and hands its [B, C] ids
+    straight to the `candidate_score` kernel's scalar-prefetch operand —
+    two chained kernels in one jitted program, no [B, pool] intermediate
+    and no host-side dedup.  ``ids_flat`` is the service-cached
+    `padded_flat_ids` plane."""
+    # deferred: ops.py imports repro.serve.index, so a module-level import
+    # here would close an import cycle for anyone importing ops first
+    from repro.kernels.lsh_retrieve.ops import retrieve_candidates
+    with jax.named_scope("serve.flush.retrieve"):
+        cand = retrieve_candidates(index, sp, user_ids, n_seeds=n_seeds,
+                                   cap=cap, C=C, popular=popular,
+                                   window=window, tail_scan=tail_scan,
+                                   interpret=interpret, impl=impl,
+                                   ids_flat=ids_flat)
+    with jax.named_scope("serve.flush.score"):
+        return score_candidates(planes, user_ids, cand, topn=topn,
+                                tile_b=tile_b, interpret=interpret, impl=impl)
+
+
 def popular_shortlist(params: Params, n: int) -> jax.Array:
     """Items with the highest baseline offset b̂_j — the candidates the bias
     part of Eq. (1) can rank high regardless of the user's neighbourhood."""
     _, ids = jax.lax.top_k(params.bh, n)
     return ids.astype(jnp.int32)
+
+
+# staged (un-fused) flavours of the walk-path stages, for profile_flush —
+# the fused programs above inline the same functions
+@jax.jit
+def _walk_gather(index, pos):
+    flat = index.sorted_ids.reshape(-1)
+    return jnp.where(pos >= 0, flat[jnp.maximum(pos, 0)], SENTINEL)
+
+
+_score_pool_staged = partial(jax.jit, static_argnames=("tile_b",))(_score_pool)
+_select_staged = partial(jax.jit, static_argnames=("topn",))(
+    _select_topn_masked)
 
 
 class RecsysService:
@@ -205,13 +382,65 @@ class RecsysService:
         self._rebuild_attempts = 0
         self._rebuild_t0 = 0.0
         self._host_bias = None           # (mu, b, bh) numpy mirror
+        # walk-kernel path: cached SENTINEL-apron id plane (invalidated
+        # whenever self.index is replaced — keyed by index identity)
+        self._ids_flat = None
+        self._ids_flat_for = None
 
     # ---- core pipelines (fixed [micro_batch] shapes → warm jit caches) ----
+
+    def route_decision(self) -> dict:
+        """The small-catalog routing verdict, exposed for `stats()` and
+        the bench: candidate retrieval costs a fixed ~C-proportional
+        amount per user, so below a catalog-size crossover the exact O(N)
+        scan is simply faster *and* exact.  ``decision`` reports what the
+        heuristic would pick even when routing is disabled
+        (``enabled=False``) — the bench records the verdict without
+        turning it on."""
+        cfg = self.cfg
+        thr = cfg.route_full_below if cfg.route_full_below > 0 else 48 * cfg.C
+        n = self.planes.n_items
+        decision = ("full" if cfg.mode == "candidate" and n <= thr
+                    else cfg.mode)
+        return dict(enabled=cfg.route_full_below != 0, threshold=int(thr),
+                    n_items=int(n), decision=decision)
+
+    def _flat_ids(self) -> jax.Array:
+        if self._ids_flat_for is not self.index:
+            self._ids_flat = lsh_index.padded_flat_ids(self.index,
+                                                       cap=self.cfg.cap)
+            self._ids_flat_for = self.index
+        return self._ids_flat
+
+    def _tail_k(self) -> int:
+        """Static tail-scan width for the walk path: the resident tail
+        prefix (slots fill strictly in insertion order) rounded up to 16,
+        so a burst of inserts retraces at most once per 16 — and the
+        steady state between ingests (empty tail) skips the scan and its
+        dead SENTINEL score columns entirely."""
+        n = self.index.tail_fill
+        return 0 if not n else min(self.index.tail_cap, -(-n // 16) * 16)
 
     def _recommend(self, user_ids: jax.Array):
         cfg = self.cfg
         if cfg.mode == "full":
             return full_topn(self.params, user_ids, topn=cfg.topn)
+        if cfg.route_full_below and self.route_decision()["decision"] == "full":
+            return full_topn(self.params, user_ids, topn=cfg.topn)
+        if cfg.band_budget:
+            if cfg.scorer_impl() == "ref":       # CPU: pure-XLA walk path
+                return recommend_walked(
+                    self.planes, self.index, self.sp, user_ids, self.popular,
+                    n_seeds=cfg.n_seeds, cap=cfg.cap, budget=cfg.band_budget,
+                    window=cfg.seed_window, tail_k=self._tail_k(),
+                    topn=cfg.topn, tile_b=cfg.walk_tile_b)
+            return recommend_walked_kernel(
+                self.planes, self.index, self.sp, user_ids, self.popular,
+                self._flat_ids(), n_seeds=cfg.n_seeds, cap=cfg.cap, C=cfg.C,
+                window=cfg.seed_window,
+                tail_scan=self.index.tail_fill > 0, topn=cfg.topn,
+                tile_b=cfg.tile_b, interpret=cfg.interpret_mode(),
+                impl=cfg.scorer_impl())
         return recommend_candidates(
             self.planes, self.index, self.sp, user_ids, self.JK,
             self.popular, n_seeds=cfg.n_seeds, cap=cfg.cap, C=cfg.C,
@@ -455,6 +684,9 @@ class RecsysService:
             fallbacks=int(reg.counter("serve.fallback_full")),
             quarantined=int(reg.counter("serve.quarantined")),
             index_stale=bool(reg.gauge("serve.index_stale", 0.0)),
+            # small-catalog routing (PR 8): the verdict is always
+            # reported; `enabled` says whether _recommend acts on it
+            route=self.route_decision(),
         )
 
     def profile_flush(self, user_ids=None) -> dict:
@@ -466,8 +698,10 @@ class RecsysService:
         `jax.named_scope` stage names inside the program show up, and only
         in XLA device profiles).  This path runs the same stages as
         separate dispatches with a readiness barrier after each, so the
-        span tree  serve.flush → retrieve(.pool → .dedup) → score  carries
-        real wall times into the Chrome trace export.  Slower than the
+        span tree — serve.flush → retrieve(.desc → .walk) → score →
+        select on the walk path, retrieve(.pool → .dedup) → score on the
+        legacy pool path — carries real wall times into the Chrome trace
+        export.  Slower than the
         fused path by the un-fused dispatch overhead — a profiling tool,
         not a serving mode.  Returns {span name: seconds} for this run.
         """
@@ -483,6 +717,78 @@ class RecsysService:
                     jax.block_until_ready(
                         full_topn(self.params, ids, topn=cfg.topn))
                 names += ["serve.flush.score"]
+            elif cfg.band_budget and cfg.scorer_impl() == "ref":
+                # CPU walk path: desc → walk → score → select (dedup
+                # happens inside select; there is no dedup stage to time)
+                tail_k = self._tail_k()
+                with reg.span("serve.flush.retrieve"):
+                    with reg.span("serve.flush.retrieve.desc"):
+                        seeds = seed_items(self.sp, ids, n_seeds=cfg.n_seeds,
+                                           window=cfg.seed_window)
+                        starts, counts = window_descriptors(
+                            self.index, seeds, cap=cfg.cap)
+                        jax.block_until_ready(counts)
+                    with reg.span("serve.flush.retrieve.walk"):
+                        pos = enumerate_windows(starts, counts,
+                                                budget=cfg.band_budget)
+                        walked = _walk_gather(self.index, pos)
+                        if tail_k:
+                            walked = jnp.concatenate(
+                                [walked, tail_hits(self.index, seeds,
+                                                   k=tail_k)], axis=1)
+                        jax.block_until_ready(walked)
+                with reg.span("serve.flush.score"):
+                    s, cand = _score_pool_staged(self.planes, ids, walked,
+                                                 self.popular,
+                                                 tile_b=cfg.walk_tile_b)
+                    jax.block_until_ready(s)
+                with reg.span("serve.flush.select"):
+                    jax.block_until_ready(
+                        _select_staged(s, cand, topn=cfg.topn))
+                names += ["serve.flush.retrieve",
+                          "serve.flush.retrieve.desc",
+                          "serve.flush.retrieve.walk",
+                          "serve.flush.score", "serve.flush.select"]
+            elif cfg.band_budget:
+                # accelerator walk path: the lsh_retrieve kernel IS the
+                # walk+dedup stage
+                tail = self.index.tail_fill > 0 and self.index.tail_cap > 0
+                with reg.span("serve.flush.retrieve"):
+                    with reg.span("serve.flush.retrieve.desc"):
+                        seeds = seed_items(self.sp, ids, n_seeds=cfg.n_seeds,
+                                           window=cfg.seed_window)
+                        starts, lens = lsh_index.window_slices(
+                            self.index, seeds, cap=cfg.cap)
+                        extra = (tail_hits(self.index, seeds) if tail else
+                                 jnp.full((ids.shape[0], 1), SENTINEL,
+                                          jnp.int32))
+                        jax.block_until_ready(lens)
+                    with reg.span("serve.flush.retrieve.walk"):
+                        if self.popular is not None:
+                            exclude, core_C = self.popular, \
+                                cfg.C - self.popular.shape[0]
+                        else:
+                            exclude = jnp.full((1,), SENTINEL, jnp.int32)
+                            core_C = cfg.C
+                        cand = lsh_retrieve_topc(
+                            starts, lens, extra, self._flat_ids(), exclude,
+                            C=core_C, cap=cfg.cap,
+                            interpret=cfg.interpret_mode())
+                        if self.popular is not None:
+                            cand = jnp.concatenate(
+                                [cand, jnp.broadcast_to(
+                                    self.popular[None, :],
+                                    (ids.shape[0],
+                                     self.popular.shape[0]))], axis=1)
+                        jax.block_until_ready(cand)
+                with reg.span("serve.flush.score"):
+                    jax.block_until_ready(score_candidates(
+                        self.planes, ids, cand, topn=cfg.topn,
+                        tile_b=cfg.tile_b, interpret=cfg.interpret_mode(),
+                        impl=cfg.scorer_impl()))
+                names += ["serve.flush.retrieve",
+                          "serve.flush.retrieve.desc",
+                          "serve.flush.retrieve.walk", "serve.flush.score"]
             else:
                 with reg.span("serve.flush.retrieve"):
                     with reg.span("serve.flush.retrieve.pool"):

@@ -319,8 +319,9 @@ def test_service_empty_stats():
 
 def test_service_ingest_sets_servable_latency_and_trace(tiny_service):
     """The acceptance path: ingest → stats()['ingest_to_servable_s'] > 0,
-    and a profiled flush exports nested retrieve/score/dedup spans that
-    a Chrome-trace consumer can reconstruct."""
+    and a profiled flush exports nested retrieve/walk/score spans that
+    a Chrome-trace consumer can reconstruct (walk-path layout: dedup is
+    in-kernel/at-select, so there is no dedup span)."""
     params, index, sp, scfg, sigs, lshcfg = tiny_service
     svc = RecsysService(params, index, sp, scfg).warmup()
     svc.profile_flush()
@@ -335,15 +336,16 @@ def test_service_ingest_sets_servable_latency_and_trace(tiny_service):
         if e["ph"] == "X":
             evs.setdefault(e["name"], e)
     for name in ("serve.flush", "serve.flush.retrieve",
-                 "serve.flush.retrieve.pool", "serve.flush.retrieve.dedup",
-                 "serve.flush.score", "serve.ingest"):
+                 "serve.flush.retrieve.desc", "serve.flush.retrieve.walk",
+                 "serve.flush.score", "serve.flush.select", "serve.ingest"):
         assert name in evs, name
-    fl, rt, dd = (evs["serve.flush"], evs["serve.flush.retrieve"],
-                  evs["serve.flush.retrieve.dedup"])
+    fl, rt, wk = (evs["serve.flush"], evs["serve.flush.retrieve"],
+                  evs["serve.flush.retrieve.walk"])
     inside = lambda a, b: (b["ts"] <= a["ts"]
                            and a["ts"] + a["dur"] <= b["ts"] + b["dur"])
-    assert inside(rt, fl) and inside(dd, rt)
+    assert inside(rt, fl) and inside(wk, rt)
     assert inside(evs["serve.flush.score"], fl)
+    assert inside(evs["serve.flush.select"], fl)
 
 
 def test_service_profile_flush_matches_fused_results(tiny_service):

@@ -25,9 +25,12 @@ Checks per document (dependency-free, stdlib json only):
   * ``fault_scenario`` (serve, required): the ISSUE 7 fault arm must ship
     with every serve bench — ``shed_rate``/``recall_under_fault`` in
     [0, 1], ``recover_seconds`` ≥ 0, a ``recovered`` bool;
-  * ``pr1_same_window`` (serve, optional): when present, every size entry
-    must carry the re-measured baseline QPS fields — a same-window claim
-    without numbers is not a claim.
+  * ``pr1_same_window`` / ``pr7_same_window`` (serve, optional): when
+    present, every size entry must carry the re-measured baseline QPS
+    fields — a same-window claim without numbers is not a claim.  Serve
+    size entries also require the walk-path breakdown fields
+    (``retrieve_kernel_ms``, ``dedup_in_kernel``) and the ``route``
+    verdict dict.
 
 Exit non-zero listing every violation.  Run as (CI does, right after the
 smoke benches):
@@ -148,10 +151,26 @@ def check_serve(doc) -> list:
         _num(e, "qps_ratio", lo=0.0, errs=errs)
         _num(e, "recall", lo=0.0, hi=1.0, errs=errs)
         for f in ("retrieve_ms", "score_ms", "pool_ms", "dedup_ms",
-                  "flush_ms"):
+                  "retrieve_kernel_ms", "flush_ms"):
             _num(e, f"breakdown.{f}", lo=0.0, errs=errs)
+        bd = e.get("breakdown")
+        if not isinstance(bd, dict) or not isinstance(
+                bd.get("dedup_in_kernel"), bool):
+            errs.append(f"{p}: breakdown.dedup_in_kernel missing/not bool")
         if not isinstance(e.get("scorer_hlo_cube_free"), bool):
             errs.append(f"{p}: scorer_hlo_cube_free missing/not bool")
+        route = e.get("route")
+        if not isinstance(route, dict):
+            errs.append(f"{p}: route missing (the small-catalog routing "
+                        f"verdict ships with every size entry)")
+        else:
+            _num(route, "threshold", lo=0, errs=errs)
+            _num(route, "n_items", lo=1, errs=errs)
+            if not isinstance(route.get("enabled"), bool):
+                errs.append(f"{p}: route.enabled missing/not bool")
+            if route.get("decision") not in ("full", "candidate"):
+                errs.append(f"{p}: route.decision "
+                            f"{route.get('decision')!r} invalid")
         _obs_overhead(e, p, errs, time_like=False)
     fs = doc.get("fault_scenario")
     if not isinstance(fs, dict):
@@ -166,16 +185,18 @@ def check_serve(doc) -> list:
         _num(fs, "p99_ratio", lo=0.0, errs=errs)
         if not isinstance(fs.get("recovered"), bool):
             errs.append("fault_scenario: recovered missing/not bool")
-    pr1 = doc.get("pr1_same_window")
-    if pr1 is not None:
-        if not isinstance(pr1, dict):
-            errs.append("pr1_same_window: not a dict")
-        else:
-            for k, v in pr1.items():
-                if not isinstance(v, dict):
-                    continue    # metadata (baseline commit)
-                for f in ("full_qps", "cand_qps", "recall"):
-                    _num(v, f, lo=0.0, errs=errs)
+    for section in ("pr1_same_window", "pr7_same_window"):
+        base = doc.get(section)
+        if base is None:
+            continue
+        if not isinstance(base, dict):
+            errs.append(f"{section}: not a dict")
+            continue
+        for k, v in base.items():
+            if not isinstance(v, dict):
+                continue        # metadata (baseline commit)
+            for f in ("full_qps", "cand_qps", "recall"):
+                _num(v, f, lo=0.0, errs=errs)
     return errs
 
 
