@@ -17,6 +17,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.data.sparse import SparseMatrix, baselines, lookup
 
@@ -135,6 +136,36 @@ def unpack_serve_planes(sp: ServePlanes) -> Params:
     z = jnp.zeros((N, 0), jnp.float32)
     return Params(U=sp.row[:, :F], V=sp.col[:, :F], b=sp.row[:, F],
                   bh=sp.col[:, F], W=z, C=z, mu=sp.mu)
+
+
+def shard_col_plane(col: jax.Array, bounds) -> jax.Array:
+    """Partition a ``[N, W]`` item plane into block-padded shards.
+
+    ``bounds [D+1]`` are nnz-balanced item cuts (`data.sparse.
+    balanced_bounds`): shard ``d`` owns global ids ``[bounds[d],
+    bounds[d+1])``.  Returns ``[D, block, W]`` with ``block = max shard
+    extent`` — the equal-shape stack `jax.shard_map` needs — where local
+    row ``l`` of shard ``d`` is global row ``bounds[d] + l`` and rows past
+    the shard's extent are zero (never gathered: the sharded retrieval
+    masks local ids ≥ the shard's item count to SENTINEL before scoring).
+    """
+    bounds = np.asarray(bounds)
+    D = len(bounds) - 1
+    ext = np.diff(bounds)
+    block = int(ext.max())
+    parts = [jnp.pad(col[int(bounds[d]):int(bounds[d + 1])],
+                     ((0, block - int(ext[d])), (0, 0)))
+             for d in range(D)]
+    return jnp.stack(parts)
+
+
+def unshard_col_plane(stack: jax.Array, bounds) -> jax.Array:
+    """Inverse of `shard_col_plane`: drop each shard's padding rows and
+    concatenate back to the original ``[N, W]`` id order."""
+    bounds = np.asarray(bounds)
+    ext = np.diff(bounds)
+    return jnp.concatenate(
+        [stack[d, :int(ext[d])] for d in range(len(ext))])
 
 
 def remap_params(p: Params, sched) -> Params:

@@ -435,6 +435,15 @@ def _block_id_map(bounds: np.ndarray, size: int, extent: int) -> np.ndarray:
     return (blk * extent + ids - bounds[blk]).astype(np.int64)
 
 
+# public names for the block-partitioning primitives: the serving shard
+# tier (`serve.index.build_sharded_index`, `model.shard_col_plane`) cuts
+# the *item* axis with exactly the machinery the scheduler uses for its
+# D×D parameter blocks, so the two tiers can never drift apart on what
+# "nnz-balanced" means
+balanced_bounds = _balanced_bounds
+block_id_map = _block_id_map
+
+
 def conflict_free_schedule(rows, cols, *, batch: int = 512, tiers: int = 4,
                            tier_shrink: float = 0.5,
                            min_fill_frac: float = 0.5, shards: int = 1,

@@ -58,3 +58,27 @@ def make_shard_mesh(shards: int | None = None):
     axis_types (this jax version's `make_mesh` predates them)."""
     shards = shards or jax.device_count()
     return jax.make_mesh((shards,), ("shard",))
+
+
+def serve_shard_count(request: int | str) -> int:
+    """Resolve `ServeConfig.shards` to a device count for the sharded
+    serving tier.
+
+    ``0`` → 1 (single-device oracle path); ``"auto"`` → the largest
+    power of two ≤ the local device count; an explicit int must be a
+    power of two ≤ the device count.  Power-of-two only: the serving
+    top-N tree reduce is an XOR-partner butterfly (`service.recommend`'s
+    ppermute halving merge), whose disjoint-coverage invariant — no
+    candidate ever counted twice — needs 2^k participants."""
+    avail = jax.device_count()
+    if request == "auto":
+        return 1 << max(avail.bit_length() - 1, 0)
+    d = int(request)
+    if d == 0:
+        return 1
+    if d < 1 or d & (d - 1):
+        raise ValueError(f"serve shards must be a power of two, got {d}")
+    if d > avail:
+        raise ValueError(f"serve shards={d} exceeds the {avail} local "
+                         f"device(s)")
+    return d

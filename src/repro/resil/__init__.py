@@ -26,7 +26,8 @@ from repro.resil.guard import DivergenceError, GuardConfig, check_divergence
 from repro.resil.rebuild import IndexRebuilder
 from repro.resil.validate import (IndexValidationError, PoisonBatchError,
                                   check_delta, check_ingest_batch,
-                                  validate_index)
+                                  validate_index,
+                                  validate_sharded_index)
 from repro.resil.wal import OnlineUpdater, WriteAheadLog
 
 __all__ = [
@@ -34,5 +35,6 @@ __all__ = [
     "DivergenceError", "GuardConfig", "check_divergence",
     "IndexRebuilder", "IndexValidationError", "PoisonBatchError",
     "check_delta", "check_ingest_batch", "validate_index",
+    "validate_sharded_index",
     "OnlineUpdater", "WriteAheadLog",
 ]

@@ -150,8 +150,12 @@ def validate_index(index, *, probe: int = 64, seed: int = 0) -> list:
     Returns a list of problem strings — empty means the index may be
     swapped in.  Cost is O(q·N) host-side numpy plus one jitted probe
     batch; a rebuild already paid O(q·N log N), so validation is cheap
-    relative to the build it gates."""
+    relative to the build it gates.  Sharded indexes dispatch to
+    `validate_sharded_index` (same contract, per-shard checks)."""
     from repro.serve.index import lookup_signatures   # cycle-free at call
+
+    if hasattr(index, "bounds"):           # ShardedLSHIndex
+        return validate_sharded_index(index, probe=probe, seed=seed)
 
     probs: list = []
     ss = _np(index.sorted_sigs)
@@ -191,7 +195,7 @@ def validate_index(index, *, probe: int = 64, seed: int = 0) -> list:
     # recall smoke: every probed item must retrieve itself when queried
     # with its own band signatures (self-recall is exactly 1.0 on a
     # correct index — any miss is structural corruption, not ANN noise)
-    if not probs and N:
+    if not probs and N and probe:
         rng = np.random.default_rng(seed)
         ids = rng.choice(N, size=min(probe, N), replace=False)
         qsigs = ss[np.arange(q)[:, None], so[:, ids]].T       # [P, q]
@@ -202,4 +206,72 @@ def validate_index(index, *, probe: int = 64, seed: int = 0) -> list:
         if miss:
             probs.append(f"recall smoke: {len(miss)}/{len(ids)} probe items "
                          f"failed self-retrieval (e.g. id {miss[0]})")
+    return probs
+
+
+def validate_sharded_index(index, *, probe: int = 64, seed: int = 0) -> list:
+    """`validate_index` for a `ShardedLSHIndex`: the same CSR bucket
+    invariants hold *per shard* on each `shard_local_view`, plus the
+    sharded-only geometry — bounds strictly increasing and covering
+    [0, n_items], per-shard `n_local` consistent with the cuts and the
+    common block extent, and the block-padding contract (every padded
+    slot carries `_EMPTY_SIG`, so it sorts ahead of any real signature
+    and no probe can land on it).
+
+    The self-retrieval smoke is restricted to *real* local ids
+    (< n_local): padding slots share one giant `_EMPTY_SIG` bucket, so
+    probing them with cap=4 would report false misses on a perfectly
+    healthy index."""
+    from repro.serve.index import (_EMPTY_SIG, lookup_signatures,
+                                   shard_local_view)
+
+    probs: list = []
+    bounds = _np(index.bounds)
+    n_local = _np(index.n_local)
+    D = int(index.shards)
+    if bounds.shape != (D + 1,):
+        return [f"bounds: shape {bounds.shape} != ({D + 1},)"]
+    if bounds[0] != 0 or bounds[-1] != index.n_items:
+        probs.append(f"bounds: [{bounds[0]}, {bounds[-1]}] does not cover "
+                     f"[0, {index.n_items}]")
+    if np.any(np.diff(bounds) <= 0):
+        probs.append("bounds: not strictly increasing")
+    if not np.array_equal(n_local, np.diff(bounds)):
+        probs.append(f"n_local {n_local.tolist()} != diff(bounds)")
+    if n_local.size and int(n_local.max()) != index.block:
+        probs.append(f"block {index.block} != max shard extent "
+                     f"{int(n_local.max())}")
+    if probs:
+        return probs
+
+    rng = np.random.default_rng(seed)
+    per = max(1, probe // D)
+    for d in range(D):
+        view = shard_local_view(index, d)
+        for p in validate_index(view, probe=0):
+            probs.append(f"shard {d}: {p}")
+        ss = _np(view.sorted_sigs)
+        nl = int(n_local[d])
+        # padding slots: exactly block - n_local of them, all _EMPTY_SIG,
+        # and no real item may carry the padding sentinel signature
+        n_pad = int((ss == int(_EMPTY_SIG)).sum())
+        if n_pad != (index.block - nl) * ss.shape[0]:
+            probs.append(f"shard {d}: {n_pad} padding signatures, expected "
+                         f"{(index.block - nl) * ss.shape[0]} "
+                         f"(block {index.block} - n_local {nl} per band)")
+        if probs:
+            break
+        if nl and per:
+            ids = rng.choice(nl, size=min(per, nl), replace=False)
+            so = _np(view.slot_of)
+            q = ss.shape[0]
+            qsigs = ss[np.arange(q)[:, None], so[:, ids]].T      # [P, q]
+            import jax.numpy as jnp
+            cand = np.asarray(lookup_signatures(
+                view, jnp.asarray(qsigs, jnp.int32), cap=4))
+            miss = [int(i) for k, i in enumerate(ids) if i not in cand[k]]
+            if miss:
+                probs.append(f"shard {d}: recall smoke {len(miss)}/"
+                             f"{len(ids)} real items failed self-retrieval "
+                             f"(e.g. local id {miss[0]})")
     return probs

@@ -10,23 +10,33 @@ admission with load shedding, degraded popularity fallback, background
 validate-then-swap index rebuilds, and poison-batch quarantine
 (docs/ARCHITECTURE.md §8).
 """
-from repro.serve.index import (LSHIndex, build_index, insert, lookup_items,
+from repro.serve.index import (LSHIndex, ShardedLSHIndex, build_index,
+                               build_sharded_index, insert, lookup_items,
                                lookup_signatures, needs_rebuild,
-                               padded_flat_ids, rebuild, window_slices)
+                               padded_flat_ids, rebuild, shard_bounds,
+                               shard_local_view, signatures_of,
+                               window_slices)
 from repro.serve.retrieve import (compact_pool, dedup_candidates,
                                   enumerate_windows, retrieve_for_items,
-                                  retrieve_for_users, seed_items, tail_hits,
-                                  walk_candidates, window_descriptors)
+                                  retrieve_for_users, seed_items,
+                                  shard_seed_sigs, shard_walk_local,
+                                  sig_window_descriptors, tail_hits,
+                                  translate_local_ids, walk_candidates,
+                                  window_descriptors)
 from repro.serve.service import (RecsysService, ServeConfig, full_topn,
-                                 popular_shortlist, recommend_candidates,
-                                 recommend_walked, recommend_walked_kernel)
+                                 merge_topn, popular_shortlist,
+                                 recommend_candidates, recommend_walked,
+                                 recommend_walked_kernel)
 
 __all__ = [
-    "LSHIndex", "build_index", "insert", "lookup_items", "lookup_signatures",
-    "needs_rebuild", "padded_flat_ids", "rebuild", "window_slices",
-    "compact_pool", "dedup_candidates", "enumerate_windows",
-    "retrieve_for_items", "retrieve_for_users", "seed_items", "tail_hits",
+    "LSHIndex", "ShardedLSHIndex", "build_index", "build_sharded_index",
+    "insert", "lookup_items", "lookup_signatures", "needs_rebuild",
+    "padded_flat_ids", "rebuild", "shard_bounds", "shard_local_view",
+    "signatures_of", "window_slices", "compact_pool", "dedup_candidates",
+    "enumerate_windows", "retrieve_for_items", "retrieve_for_users",
+    "seed_items", "shard_seed_sigs", "shard_walk_local",
+    "sig_window_descriptors", "tail_hits", "translate_local_ids",
     "walk_candidates", "window_descriptors", "RecsysService", "ServeConfig",
-    "full_topn", "popular_shortlist", "recommend_candidates",
+    "full_topn", "merge_topn", "popular_shortlist", "recommend_candidates",
     "recommend_walked", "recommend_walked_kernel",
 ]

@@ -76,9 +76,11 @@ class LSHIndex:
         return self.n_base + self.tail_fill
 
 
-@partial(jax.jit, static_argnames=("tail_cap",))
-def _build(sigs: jax.Array, tail_cap: int) -> LSHIndex:
-    q, N = sigs.shape
+def _build_arrays(sigs: jax.Array):
+    """The per-band CSR arrays for one signature matrix [q, N] →
+    (sorted_sigs, sorted_ids, bucket_lo, bucket_hi, slot_of), all [q, N].
+    Shared by the single-device build and the vmapped per-shard build."""
+    N = sigs.shape[1]
 
     def one_band(sig):
         order = jnp.argsort(sig).astype(jnp.int32)
@@ -89,7 +91,13 @@ def _build(sigs: jax.Array, tail_cap: int) -> LSHIndex:
         hi = jnp.searchsorted(ssig, ssig, side="right").astype(jnp.int32)
         return ssig, order, lo, hi, slot_of
 
-    ssig, order, lo, hi, slot_of = jax.vmap(one_band)(sigs)
+    return jax.vmap(one_band)(sigs)
+
+
+@partial(jax.jit, static_argnames=("tail_cap",))
+def _build(sigs: jax.Array, tail_cap: int) -> LSHIndex:
+    q, N = sigs.shape
+    ssig, order, lo, hi, slot_of = _build_arrays(sigs)
     return LSHIndex(
         sorted_sigs=ssig, sorted_ids=order, bucket_lo=lo, bucket_hi=hi,
         slot_of=slot_of,
@@ -361,3 +369,128 @@ def lookup_items(index: LSHIndex, item_ids: jax.Array, *, cap: int,
     tail = jax.vmap(one_band_tail)(index.tail_sigs, qsigs)        # [q, B, cap]
     tail = jnp.transpose(tail, (1, 0, 2)).reshape(B, -1)
     return jnp.concatenate([core, tail], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Sharded index — the mesh-partitioned image of the structure above.
+#
+# For catalogs that outgrow one device the item axis is cut into D
+# nnz-balanced contiguous ranges (the scheduler's `balanced_bounds` cuts,
+# so "balanced" means the same thing in training and serving) and every
+# shard builds the SAME per-band CSR layout over its own items in a
+# *local* id space 0..n_d−1.  Shards are block-padded to a common extent
+# (the `block_id_map` trick from the training tier): padding slots carry
+# `_EMPTY_SIG`, which sorts before every real signature and can never
+# match a probe, so they form one inert bucket at the front of each band.
+# The stacked [D, ...] arrays shard over `launch.mesh.make_shard_mesh`'s
+# "shard" axis with no resharding — leading-axis slice d IS device d's
+# local index.
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedLSHIndex:
+    """Per-shard bucket CSR over local ids, stacked on a leading shard
+    axis.  Global id ``g`` of shard ``d`` (``bounds[d] ≤ g < bounds[d+1]``)
+    appears as local id ``g − bounds[d]``; local ids ≥ ``n_local[d]`` are
+    padding.  No tail: the sharded path serves the offline-bulk regime
+    (online inserts go through the single-device tail + rebuild path)."""
+
+    sorted_sigs: jax.Array   # [D, q, block] int32, ascending per band
+    sorted_ids: jax.Array    # [D, q, block] int32 local ids
+    bucket_lo: jax.Array     # [D, q, block] int32
+    bucket_hi: jax.Array     # [D, q, block] int32
+    slot_of: jax.Array       # [D, q, block] int32 local id → slot
+    n_local: jax.Array       # [D] int32 real (non-padding) items per shard
+    bounds: jax.Array        # [D+1] int32 global cut points
+    n_items: int = dataclasses.field(metadata=dict(static=True))
+    block: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def shards(self) -> int:
+        return self.sorted_sigs.shape[0]
+
+    @property
+    def q(self) -> int:
+        return self.sorted_sigs.shape[1]
+
+
+def shard_bounds(counts: np.ndarray, shards: int) -> np.ndarray:
+    """nnz-balanced item cuts for the serving shards.  ``counts [N]`` are
+    per-item rating counts (col degrees); returns ``bounds [D+1]``.  The
+    extent floor of N/(4·D) bounds the block padding waste at ~4× even on
+    zipf catalogs whose head shard would otherwise collapse to a handful
+    of very popular items."""
+    from repro.data.sparse import balanced_bounds   # lazy: keep index.py
+    N, D = len(counts), shards                      # import-light
+    return balanced_bounds(np.asarray(counts), D,
+                           floor=max(1, N // (4 * max(D, 1))))
+
+
+def signatures_of(index: LSHIndex) -> jax.Array:
+    """Recover the full [q, n_base] signature matrix from a built index
+    (``sigs[b, g] = sorted_sigs[b, slot_of[b, g]]``).  Lets the sharded
+    build start from an already-built single-device index without the
+    caller re-threading the raw `simlsh.encode` output."""
+    return jnp.take_along_axis(index.sorted_sigs, index.slot_of, axis=1)
+
+
+def build_sharded_index(sigs: jax.Array, *, shards: int,
+                        counts: np.ndarray | None = None,
+                        bounds: np.ndarray | None = None) -> ShardedLSHIndex:
+    """sigs [q, N] int32 → block-padded per-shard CSR stack.
+
+    ``bounds`` (explicit cuts) wins over ``counts`` (nnz-balanced cuts via
+    `shard_bounds`); with neither, shards cut the id range evenly.  The
+    same dtype/id-space guards as `build_index` apply.
+    """
+    if sigs.dtype != jnp.int32:
+        raise TypeError(f"build_sharded_index: signatures must be int32, "
+                        f"got {sigs.dtype}")
+    if sigs.ndim != 2:
+        raise ValueError(f"build_sharded_index: expected [q, N] signatures, "
+                         f"got shape {sigs.shape}")
+    q, N = sigs.shape
+    if N > 1 << 30:
+        raise ValueError(f"build_sharded_index: item ids must stay below "
+                         f"2^30 (the dedup hash mask); got N={N}")
+    if shards < 1 or N < shards:
+        raise ValueError(f"build_sharded_index: need 1 ≤ shards ≤ N, got "
+                         f"shards={shards}, N={N}")
+    if bounds is None:
+        bounds = (shard_bounds(counts, shards) if counts is not None else
+                  np.linspace(0, N, shards + 1).astype(np.int64))
+    bounds = np.asarray(bounds, np.int64)
+    if (len(bounds) != shards + 1 or bounds[0] != 0 or bounds[-1] != N
+            or np.any(np.diff(bounds) < 1)):
+        raise ValueError(f"build_sharded_index: bounds {bounds} must be "
+                         f"strictly increasing from 0 to N={N}")
+    ext = np.diff(bounds)
+    block = int(ext.max())
+    parts = [jnp.pad(sigs[:, int(bounds[d]):int(bounds[d + 1])],
+                     ((0, 0), (0, block - int(ext[d]))),
+                     constant_values=int(_EMPTY_SIG))
+             for d in range(shards)]
+    ssig, sids, lo, hi, slot = jax.vmap(_build_arrays)(jnp.stack(parts))
+    return ShardedLSHIndex(
+        sorted_sigs=ssig, sorted_ids=sids, bucket_lo=lo, bucket_hi=hi,
+        slot_of=slot, n_local=jnp.asarray(ext, jnp.int32),
+        bounds=jnp.asarray(bounds, jnp.int32), n_items=N, block=block)
+
+
+def shard_local_view(index: ShardedLSHIndex, d: int) -> LSHIndex:
+    """Shard ``d``'s arrays as a plain (tail-less) `LSHIndex` over its
+    ``block`` local ids — padding slots included as real `_EMPTY_SIG`
+    items.  Host-side tool for validation and tests; the serving path
+    slices the stack inside `shard_map` instead."""
+    idx = LSHIndex(
+        sorted_sigs=index.sorted_sigs[d], sorted_ids=index.sorted_ids[d],
+        bucket_lo=index.bucket_lo[d], bucket_hi=index.bucket_hi[d],
+        slot_of=index.slot_of[d],
+        tail_sigs=jnp.full((index.q, 0), _EMPTY_SIG, jnp.int32),
+        tail_ids=jnp.full((0,), SENTINEL, jnp.int32),
+        tail_len=jnp.asarray(0, jnp.int32),
+        n_base=index.block, tail_cap=0)
+    object.__setattr__(idx, "_tail_host", 0)
+    return idx

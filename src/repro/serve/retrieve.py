@@ -34,7 +34,8 @@ import jax.numpy as jnp
 
 from repro.core.topk import SENTINEL
 from repro.data.sparse import SparseMatrix
-from repro.serve.index import LSHIndex, _sig_of_items, lookup_items
+from repro.serve.index import (LSHIndex, _EMPTY_SIG, _sig_of_items,
+                               lookup_items)
 
 # invertible 30-bit multiplicative hash (2654435761·x mod 2³⁰); item ids
 # must stay below 2³⁰ — comfortably above any catalog this serves
@@ -314,33 +315,16 @@ def _sortpairs_bitonic(st, en):
     return st, en
 
 
-@partial(jax.jit, static_argnames=("cap",))
-def window_descriptors(index: LSHIndex, seeds: jax.Array, *, cap: int):
-    """Merged per-(user, band) bucket-window intervals.
-
-    seeds [B, S] → (starts, counts), both [B, q·S] int32.  Each seed
-    contributes its `lookup_items`-geometry window (centred on its slot,
-    clipped to its bucket, ≤ ``cap`` wide); windows of the *same band* are
-    sorted by start and overlaps are trimmed (interval k begins at
+def _merge_intervals(st: jax.Array, en: jax.Array, base: jax.Array):
+    """Sort + overlap-trim per-band interval lists.  st/en [q, B, S]
+    (slot-space starts/ends, `_BIG` marking invalid intervals) →
+    (starts, counts) [B, q·S] with ``starts`` lifted to flat positions by
+    ``base`` [q, 1, 1] (band b's slot offset).  Windows of the same band
+    are sorted by start and overlaps trimmed (interval k begins at
     ``max(start_k, max(end_0..k-1))``), so within a band every slot
-    appears at most once.  ``starts`` are flat positions into
-    ``sorted_ids.reshape(-1)``; ``counts`` may be 0 (fully-shadowed or
-    invalid windows).  Intervals arrive band-major but NOT globally
-    sorted — consumers only need the per-band disjointness.
-    """
-    B, S = seeds.shape
-    q, Nn = index.q, index.n_base
-    valid = (seeds != SENTINEL) & (seeds >= 0) & (seeds < Nn)
-    safe = jnp.clip(seeds, 0, Nn - 1)
-    base = (jnp.arange(q, dtype=jnp.int32) * Nn)[:, None, None]    # [q,1,1]
-    slot = index.slot_of.reshape(-1)[base + safe[None]]            # [q,B,S]
-    fslot = base + slot
-    lo = index.bucket_lo.reshape(-1)[fslot]
-    hi = index.bucket_hi.reshape(-1)[fslot]
-    st = jnp.clip(slot - cap // 2, lo, jnp.maximum(hi - cap, lo))
-    en = jnp.minimum(st + cap, hi)
-    st = jnp.where(valid[None], st, _BIG)
-    en = jnp.where(valid[None], en, _BIG)
+    appears at most once.  Shared tail of `window_descriptors` (slot-
+    addressed) and `sig_window_descriptors` (signature-addressed)."""
+    q, B, S = st.shape
     Sp = 1 << max(S - 1, 0).bit_length()       # bitonic needs a pow-2 width
     if Sp > S:
         pad = jnp.full((q, B, Sp - S), _BIG, jnp.int32)
@@ -360,6 +344,35 @@ def window_descriptors(index: LSHIndex, seeds: jax.Array, *, cap: int):
     starts = jnp.transpose(ns, (1, 0, 2)).reshape(B, q * S)
     counts = jnp.transpose(cnt, (1, 0, 2)).reshape(B, q * S)
     return starts, counts
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def window_descriptors(index: LSHIndex, seeds: jax.Array, *, cap: int):
+    """Merged per-(user, band) bucket-window intervals.
+
+    seeds [B, S] → (starts, counts), both [B, q·S] int32.  Each seed
+    contributes its `lookup_items`-geometry window (centred on its slot,
+    clipped to its bucket, ≤ ``cap`` wide); overlapping windows of the
+    same band are merged (`_merge_intervals`), so within a band every
+    slot appears at most once.  ``starts`` are flat positions into
+    ``sorted_ids.reshape(-1)``; ``counts`` may be 0 (fully-shadowed or
+    invalid windows).  Intervals arrive band-major but NOT globally
+    sorted — consumers only need the per-band disjointness.
+    """
+    B, S = seeds.shape
+    q, Nn = index.q, index.n_base
+    valid = (seeds != SENTINEL) & (seeds >= 0) & (seeds < Nn)
+    safe = jnp.clip(seeds, 0, Nn - 1)
+    base = (jnp.arange(q, dtype=jnp.int32) * Nn)[:, None, None]    # [q,1,1]
+    slot = index.slot_of.reshape(-1)[base + safe[None]]            # [q,B,S]
+    fslot = base + slot
+    lo = index.bucket_lo.reshape(-1)[fslot]
+    hi = index.bucket_hi.reshape(-1)[fslot]
+    st = jnp.clip(slot - cap // 2, lo, jnp.maximum(hi - cap, lo))
+    en = jnp.minimum(st + cap, hi)
+    st = jnp.where(valid[None], st, _BIG)
+    en = jnp.where(valid[None], en, _BIG)
+    return _merge_intervals(st, en, base)
 
 
 @partial(jax.jit, static_argnames=("budget",))
@@ -435,3 +448,96 @@ def walk_candidates(index: LSHIndex, sp: SparseMatrix, user_ids: jax.Array,
     flat = index.sorted_ids.reshape(-1)
     ids = jnp.where(pos >= 0, flat[jnp.maximum(pos, 0)], SENTINEL)
     return ids, seeds
+
+
+# ---------------------------------------------------------------------------
+# Shard-local walk (the per-device half of the sharded serving path).
+#
+# Under `shard_map` each device holds one shard of a `ShardedLSHIndex`:
+# the same walk as above, but addressed by *signature* instead of seed
+# slot — a seed's slot only exists in its owning shard, while its band
+# signatures (owner-computed, psum-shared; see `service`) let every shard
+# binary-search its own local buckets.  All local ids stay local until
+# scoring is done; `translate_local_ids` lifts the survivors to global
+# ids just before selection, masking the block-padding slots to SENTINEL
+# so they can never leak into a merged top-N.
+# ---------------------------------------------------------------------------
+
+
+def shard_seed_sigs(ssig: jax.Array, slot_of: jax.Array, seeds: jax.Array,
+                    lo: jax.Array, n_local: jax.Array) -> jax.Array:
+    """Owner-computed band signatures of the seeds this shard owns.
+
+    ssig/slot_of [q, block] (one shard's local arrays), seeds [B, S]
+    global ids, ``lo`` the shard's first global id, ``n_local`` its real
+    item count.  → [q, B, S] int32: the seed's signature where this shard
+    owns it, 0 elsewhere.  Summing the contributions over the shard axis
+    (each seed has exactly one owner) gives every shard every seed's
+    signature; callers must mask seeds owned by *no* shard (SENTINEL /
+    out of range) to `_EMPTY_SIG` after the sum — a sum of zeros is a
+    legal signature.
+    """
+    q, block = ssig.shape
+    local = seeds - lo
+    owned = (seeds != SENTINEL) & (local >= 0) & (local < n_local)
+    safe = jnp.clip(local, 0, block - 1)
+    slot = slot_of[:, safe.reshape(-1)]                      # [q, B·S]
+    sig = jnp.take_along_axis(ssig, slot, axis=1)
+    return jnp.where(owned[None], sig.reshape((q,) + seeds.shape), 0)
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def sig_window_descriptors(ssig: jax.Array, qsigs: jax.Array, *, cap: int):
+    """Signature-addressed window descriptors over one shard's local CSR.
+
+    ssig [q, block] (ascending per band), qsigs [q, B, S] seed band
+    signatures (`_EMPTY_SIG` = invalid) → (starts, counts) [B, q·S] flat
+    positions into the shard's ``sorted_ids.reshape(-1)``.
+
+    Geometry: windows take the first ≤ ``cap`` slots of the local bucket
+    (bucket-head, not seed-centred — a probing shard has no seed slot to
+    centre on).  When a bucket fits in ``cap`` both geometries return the
+    whole bucket, so the union over shards equals the single-device
+    window union exactly whenever nothing truncates; under truncation the
+    shards collectively keep up to D·cap of a bucket family where one
+    device keeps cap.  Same-band duplicate windows (two seeds sharing a
+    bucket) merge to one via `_merge_intervals`; distinct signatures hit
+    disjoint buckets, so per-band disjointness holds by construction.
+    """
+    q, block = ssig.shape
+    _, B, S = qsigs.shape
+    flat = qsigs.reshape(q, B * S)
+    lo = jax.vmap(partial(jnp.searchsorted, side="left"))(ssig, flat)
+    hi = jax.vmap(partial(jnp.searchsorted, side="right"))(ssig, flat)
+    lo = lo.astype(jnp.int32).reshape(q, B, S)
+    hi = hi.astype(jnp.int32).reshape(q, B, S)
+    valid = qsigs != _EMPTY_SIG
+    st = jnp.where(valid, lo, _BIG)
+    en = jnp.where(valid, jnp.minimum(lo + cap, hi), _BIG)
+    base = (jnp.arange(q, dtype=jnp.int32) * block)[:, None, None]
+    return _merge_intervals(st, en, base)
+
+
+@partial(jax.jit, static_argnames=("cap", "budget"))
+def shard_walk_local(ssig: jax.Array, sids: jax.Array, qsigs: jax.Array,
+                     n_local: jax.Array, *, cap: int, budget: int):
+    """One shard's walked candidates in LOCAL ids, SENTINEL-padded.
+
+    ssig/sids [q, block], qsigs [q, B, S] (see `shard_seed_sigs`),
+    ``n_local`` the shard's real item count → ids [B, budget].  Block-
+    padding slots (local id ≥ n_local) are masked out here — they carry
+    `_EMPTY_SIG` and are unreachable by a real probe, but the mask keeps
+    the invariant unconditional.  Cross-band duplicates remain (same
+    contract as `walk_candidates`).
+    """
+    starts, counts = sig_window_descriptors(ssig, qsigs, cap=cap)
+    pos = enumerate_windows(starts, counts, budget=budget)
+    flat = sids.reshape(-1)
+    lid = jnp.where(pos >= 0, flat[jnp.maximum(pos, 0)], SENTINEL)
+    return jnp.where(lid < n_local, lid, SENTINEL)
+
+
+def translate_local_ids(local_ids: jax.Array, lo: jax.Array) -> jax.Array:
+    """Shard-local → global ids: ``l ↦ lo + l``; SENTINEL stays SENTINEL
+    (the local walk already masked padding slots)."""
+    return jnp.where(local_ids == SENTINEL, SENTINEL, local_ids + lo)

@@ -59,6 +59,7 @@ from repro.data.sparse import SparseMatrix
 from repro.kernels.candidate_score.kernel import NEG
 from repro.kernels.candidate_score.ops import score_candidates
 from repro.kernels.lsh_retrieve.kernel import lsh_retrieve_topc
+from repro.launch.mesh import make_shard_mesh, serve_shard_count, shard_map
 from repro.resil import faults
 from repro.resil.rebuild import IndexRebuilder
 from repro.resil.validate import (PoisonBatchError, check_accumulators,
@@ -66,7 +67,9 @@ from repro.resil.validate import (PoisonBatchError, check_accumulators,
 from repro.serve import index as lsh_index
 from repro.serve.retrieve import (candidate_pool, enumerate_windows,
                                   finalize_candidates, retrieve_for_users,
-                                  seed_items, tail_hits, walk_candidates,
+                                  seed_items, shard_seed_sigs,
+                                  shard_walk_local, tail_hits,
+                                  translate_local_ids, walk_candidates,
                                   window_descriptors)
 
 
@@ -102,6 +105,26 @@ class ServeConfig:
                               # cap=8 on zipf catalogs) — budget
                               # truncation drops whole trailing windows,
                               # which costs recall fast
+    shards: int | str = 0     # sharded serving data path (million-item
+                              # catalogs): 0 = off — the single-device
+                              # oracle path, unchanged; "auto" = the
+                              # largest power of two ≤ the local device
+                              # count; an int = exactly that many shards
+                              # (power of two).  The col plane and LSH
+                              # index partition into nnz-balanced item
+                              # ranges; each flush runs the walk + score
+                              # per shard under shard_map and tree-merges
+                              # the per-shard top-N partials (log₂D
+                              # ppermute rounds, no candidate gather).
+                              # Walk path only (requires band_budget > 0)
+                              # and read-only: online ingest goes through
+                              # the single-device tail + rebuild path
+    shard_budget: int = 0     # per-shard walk slot budget (0 = auto:
+                              # 1.5×band_budget/D rounded up to 32, ≥64 —
+                              # per-shard window mass is ≈1/D of the
+                              # global one on nnz-balanced cuts, and the
+                              # 1.5× slack absorbs shard skew before
+                              # truncation starts costing recall)
     route_full_below: int = 0 # candidate-mode routing escape hatch: serve
                               # via exact full_topn when the catalog has at
                               # most this many items (candidate retrieval
@@ -156,6 +179,17 @@ class ServeConfig:
 
     def resolved_pool_width(self) -> int:
         return self.pool_width
+
+    def resolved_shard_budget(self, shards: int) -> int:
+        # 2× the per-shard share of the single-device walk budget: a
+        # shard's bucket-head windows don't center on the seed, so parity
+        # needs more enumeration slack than budget/D — at 1.5× the
+        # planted-catalog recall sits ~0.02 below the single-device walk,
+        # at 2× it is back within ±0.001 (multidev_checks::sharded_serve)
+        if self.shard_budget:
+            return self.shard_budget
+        per = -(-2 * self.band_budget // max(shards, 1))
+        return max(64, -(-per // 32) * 32)
 
 
 @partial(jax.jit, static_argnames=("topn",))
@@ -268,6 +302,107 @@ def _select_topn_masked(s, cand, *, topn: int):
         outi.append(jnp.where(sv > NEG, picked, SENTINEL))
         s = jnp.where(cand == picked[:, None], NEG, s)
     return jnp.stack(outs, 1), jnp.stack(outi, 1)
+
+
+def merge_topn(sa, ia, sb, ib, *, topn: int):
+    """Merge two top-n partial lists into the top-n of their union.
+
+    (scores, ids) pairs [B, n] → [B, topn].  The total order is (score
+    descending, id ascending) — one two-key `lax.sort` over the [B, 2n]
+    concatenation — which makes the merge associative and commutative, so
+    the butterfly tree reduce below is shard-split-invariant (the
+    property suite checks exactly this against a numpy lexsort oracle).
+    Rows with fewer than n real candidates carry (NEG, SENTINEL) padding,
+    which sinks below every real score; the two sides' real ids must be
+    disjoint (shards partition the catalog), otherwise a duplicate id
+    could occupy two output slots.
+
+    Tie semantics vs the single-device path: `_select_topn_masked` breaks
+    equal scores by pool position, this merge by id — the returned id
+    *set* can differ only when distinct items tie exactly at the n-th
+    score, where both answers are equally exact.
+    """
+    s = jnp.concatenate([sa, sb], axis=1)
+    i = jnp.concatenate([ia, ib], axis=1)
+    ns, ii = jax.lax.sort((-s, i), dimension=1, num_keys=2)
+    return -ns[:, :topn], ii[:, :topn]
+
+
+def _build_sharded_recommend(mesh, *, D: int, F: int, topn: int,
+                             n_seeds: int, cap: int, budget: int,
+                             window: int, tile_b: int, has_popular: bool):
+    """The sharded flush as ONE jitted shard_map program.
+
+    Per device: owner-compute + psum-share the seeds' band signatures
+    (each seed lives in exactly one shard; the exchange is a [q, B, S]
+    int32 psum — the only all-to-all in the program), walk the shard's
+    local buckets by signature, score the local pool against the shard's
+    col-plane slice, select a per-shard top-N in global ids, then merge
+    partials with a log₂(D) XOR-partner butterfly of `ppermute`s — at
+    round k partners' coverage sets are disjoint by construction, so no
+    candidate is ever counted twice and no [B, pool] candidate set ever
+    leaves its device.  After the butterfly every device holds the global
+    answer; the host takes shard 0's copy.
+    """
+    spec_shard = jax.sharding.PartitionSpec("shard")
+    spec_rep = jax.sharding.PartitionSpec()
+
+    def body(urow, seeds, col, ssig, sids, slot, n_local, bounds, popular):
+        # sharded operands arrive with a leading [1] shard slice
+        col, ssig, sids, slot = col[0], ssig[0], sids[0], slot[0]
+        n_loc = n_local[0]
+        lo = bounds[jax.lax.axis_index("shard")]
+        contrib = shard_seed_sigs(ssig, slot, seeds, lo, n_loc)
+        qsigs = jax.lax.psum(contrib, "shard")
+        qsigs = jnp.where((seeds != SENTINEL)[None], qsigs,
+                          lsh_index._EMPTY_SIG)
+        local = shard_walk_local(ssig, sids, qsigs, n_loc, cap=cap,
+                                 budget=budget)
+        B = urow.shape[0]
+        if has_popular:
+            # the shard scores only the shortlist items it owns; the
+            # union over shards restores the full reserved shortlist
+            plocal = popular - lo
+            plocal = jnp.where((plocal >= 0) & (plocal < n_loc), plocal,
+                               SENTINEL)
+            local = jnp.concatenate(
+                [local,
+                 jnp.broadcast_to(plocal[None], (B, plocal.shape[0]))],
+                axis=1)
+        pad = (-B) % tile_b
+        u = jnp.pad(urow, ((0, pad), (0, 0))) if pad else urow
+        c = (jnp.pad(local, ((0, pad), (0, 0)),
+                     constant_values=int(SENTINEL)) if pad else local)
+        s = _pool_scores(u, col, c, tile_b=tile_b)[:B]
+        ps, pi = _select_topn_masked(s, translate_local_ids(local, lo),
+                                     topn=topn)
+        k = 1
+        while k < D:
+            perm = [(i, i ^ k) for i in range(D)]
+            qs = jax.lax.ppermute(ps, "shard", perm)
+            qi = jax.lax.ppermute(pi, "shard", perm)
+            ps, pi = merge_topn(ps, pi, qs, qi, topn=topn)
+            k *= 2
+        return ps[None], pi[None]
+
+    smapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(spec_rep, spec_rep, spec_shard, spec_shard, spec_shard,
+                  spec_shard, spec_shard, spec_rep, spec_rep),
+        out_specs=(spec_shard, spec_shard),
+        check_rep=False)
+
+    @jax.jit
+    def run(row, mu, col_stack, ssig, sids, slot, n_local, bounds, sp,
+            user_ids, popular):
+        with jax.named_scope("serve.flush.sharded"):
+            seeds = seed_items(sp, user_ids, n_seeds=n_seeds, window=window)
+            urow = row[user_ids].at[:, F].add(mu)
+            ps, pi = smapped(urow, seeds, col_stack, ssig, sids, slot,
+                             n_local, bounds, popular)
+        return ps[0], pi[0]
+
+    return run
 
 
 @partial(jax.jit,
@@ -386,6 +521,44 @@ class RecsysService:
         # whenever self.index is replaced — keyed by index identity)
         self._ids_flat = None
         self._ids_flat_for = None
+        # sharded serving tier (ServeConfig.shards): built once from the
+        # same (params, index, sp) the single-device path serves, so the
+        # two stay answer-comparable
+        self._shard_state = None
+        self._sharded_fn = None
+        shards = serve_shard_count(cfg.shards) if cfg.mode != "full" else 1
+        if shards > 1:
+            self._init_shards(shards)
+
+    def _init_shards(self, shards: int) -> None:
+        """Cut the item space into nnz-balanced shards and build the
+        per-shard serving state: the block-padded col-plane stack, the
+        sharded index (local bucket CSR per shard), and the jitted
+        shard_map program over `make_shard_mesh`."""
+        cfg = self.cfg
+        if not cfg.band_budget:
+            raise ValueError("sharded serving requires the walk path "
+                             "(band_budget > 0); the legacy pool+dedup "
+                             "pipeline is single-device only")
+        if self.index.tail_fill:
+            raise ValueError("sharded serving requires an empty index tail "
+                             "— rebuild before sharding (online ingest is "
+                             "single-device only)")
+        counts = np.bincount(np.asarray(self.sp.cols),
+                             minlength=self.planes.n_items)
+        bounds = lsh_index.shard_bounds(counts, shards)
+        sidx = lsh_index.build_sharded_index(
+            lsh_index.signatures_of(self.index), shards=shards,
+            bounds=bounds)
+        col_stack = model.shard_col_plane(self.planes.col, bounds)
+        mesh = make_shard_mesh(shards)
+        self._shard_state = (sidx, col_stack, mesh, shards)
+        self._sharded_fn = _build_sharded_recommend(
+            mesh, D=shards, F=self.planes.F, topn=cfg.topn,
+            n_seeds=cfg.n_seeds, cap=cfg.cap,
+            budget=cfg.resolved_shard_budget(shards),
+            window=cfg.seed_window, tile_b=cfg.walk_tile_b,
+            has_popular=self.popular is not None)
 
     # ---- core pipelines (fixed [micro_batch] shapes → warm jit caches) ----
 
@@ -427,6 +600,14 @@ class RecsysService:
             return full_topn(self.params, user_ids, topn=cfg.topn)
         if cfg.route_full_below and self.route_decision()["decision"] == "full":
             return full_topn(self.params, user_ids, topn=cfg.topn)
+        if self._shard_state is not None:
+            sidx, col_stack, _, _ = self._shard_state
+            popular = (self.popular if self.popular is not None else
+                       jnp.zeros((1,), jnp.int32))
+            return self._sharded_fn(
+                self.planes.row, self.planes.mu, col_stack,
+                sidx.sorted_sigs, sidx.sorted_ids, sidx.slot_of,
+                sidx.n_local, sidx.bounds, self.sp, user_ids, popular)
         if cfg.band_budget:
             if cfg.scorer_impl() == "ref":       # CPU: pure-XLA walk path
                 return recommend_walked(
@@ -687,6 +868,9 @@ class RecsysService:
             # small-catalog routing (PR 8): the verdict is always
             # reported; `enabled` says whether _recommend acts on it
             route=self.route_decision(),
+            # sharded tier (PR 9): 1 = the single-device oracle path
+            shards=(self._shard_state[3] if self._shard_state is not None
+                    else 1),
         )
 
     def profile_flush(self, user_ids=None) -> dict:
@@ -717,6 +901,12 @@ class RecsysService:
                     jax.block_until_ready(
                         full_topn(self.params, ids, topn=cfg.topn))
                 names += ["serve.flush.score"]
+            elif self._shard_state is not None:
+                # the sharded flush is one shard_map dispatch — host
+                # spans cannot subdivide its collectives; time it whole
+                with reg.span("serve.flush.sharded"):
+                    jax.block_until_ready(self._recommend(ids))
+                names += ["serve.flush.sharded"]
             elif cfg.band_budget and cfg.scorer_impl() == "ref":
                 # CPU walk path: desc → walk → score → select (dedup
                 # happens inside select; there is no dedup stage to time)
@@ -878,6 +1068,11 @@ class RecsysService:
         folding the tail away) flips the static tail fast path in
         `_recommend`, so re-warm here — the retrace lands in ingestion
         time, not in the next request's latency window."""
+        if self._shard_state is not None:
+            raise NotImplementedError(
+                "sharded serving is read-only: online ingest goes through "
+                "a single-device service (tail + rebuild), whose rebuilt "
+                "index a new sharded service is constructed from")
         t0_ns = time.perf_counter_ns()
         try:
             check_ingest_batch(new_sigs, new_ids, q=self.index.q)
@@ -927,6 +1122,11 @@ class RecsysService:
         The index is never rebuilt, but the grown parameter shapes force
         one retrace of the serving pipelines — re-warm here so the compile
         lands in ingestion time, not in a request's latency window."""
+        if self._shard_state is not None:
+            raise NotImplementedError(
+                "sharded serving is read-only: run the online-update "
+                "handoff on a single-device service and rebuild the "
+                "sharded one from the grown state")
         t0_ns = time.perf_counter_ns()
         # quarantine before touching anything: NaN-poisoned accumulator
         # slabs would re-sign new columns into valid-looking garbage

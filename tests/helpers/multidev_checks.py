@@ -69,6 +69,79 @@ def check_sharded_epoch():
     print(f"sharded rmse {r2:.6f} == single-device {r1:.6f}")
 
 
+def check_sharded_serve():
+    """Sharded serving tier (ISSUE 9) on 4 host devices vs the
+    single-device walk oracle.  Two regimes:
+
+    * truncation-free (cap ≥ any bucket, budgets ≥ q·N): both paths
+      enumerate every probed bucket in full, so the top-N must be
+      *bit-exact* — identical id sets at equal scores for every user;
+    * bench-like truncating settings on a planted catalog: the window
+      geometries legitimately differ (seed-centred vs per-shard
+      bucket-head), so the gate is recall parity — recall@10 of the
+      sharded path within ±0.01 of the single-device walk path.
+    """
+    from repro.core import simlsh, topk
+    from repro.data.sparse import from_coo
+    from repro.serve import (RecsysService, ServeConfig, build_index,
+                             full_topn)
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+    from benchmarks.bench_serve import CatalogSpec, make_catalog
+
+    assert jax.device_count() == 4, jax.device_count()
+    spec = CatalogSpec(N=4000)
+    params, sp, _ = make_catalog(spec, seed=0)
+    M = params.U.shape[0]
+    lsh = simlsh.SimLSHConfig(G=8, p=2, q=10, band_cap=16)
+    key = jax.random.PRNGKey(0)
+    sigs = simlsh.encode(sp, lsh, key)
+    JK = topk.topk_from_signatures(sigs, jax.random.fold_in(key, 1), K=16,
+                                   band_cap=lsh.band_cap)
+    index = build_index(sigs, tail_cap=0)
+    rng = np.random.default_rng(1)
+    users = jnp.asarray(rng.integers(0, M, 128), jnp.int32)
+
+    def top_sets(s, i):
+        s, i = np.asarray(s), np.asarray(i)
+        sent = np.iinfo(np.int32).max
+        return [(frozenset(i[u][i[u] != sent].tolist()),
+                 np.sort(s[u][i[u] != sent])) for u in range(i.shape[0])]
+
+    # regime 1: truncation-free → bit-exact parity
+    exact = dict(topn=10, micro_batch=128, n_seeds=8, cap=4096,
+                 band_budget=16384, shard_budget=16384, n_popular=0,
+                 use_jk=False)
+    svc_s = RecsysService(params, index, sp, ServeConfig(**exact, shards=4))
+    assert svc_s._shard_state is not None and svc_s.stats()["shards"] == 4
+    svc_1 = RecsysService(params, index, sp, ServeConfig(**exact))
+    for (ids_a, s_a), (ids_b, s_b) in zip(
+            top_sets(*svc_s._recommend(users)),
+            top_sets(*svc_1._recommend(users))):
+        assert ids_a == ids_b, (sorted(ids_a - ids_b), sorted(ids_b - ids_a))
+        np.testing.assert_allclose(s_a, s_b, rtol=1e-5, atol=1e-5)
+
+    # regime 2: bench-like truncation → recall parity ±0.01
+    bench = dict(topn=10, micro_batch=128, C=512, n_seeds=16, cap=8,
+                 n_popular=64, tile_b=16, band_budget=512)
+    _, exact_i = full_topn(params, users, topn=10)
+    exact_i = np.asarray(exact_i)
+
+    def recall(svc):
+        got = np.asarray(svc._recommend(users)[1])
+        hits = sum(len(set(got[u]) & set(exact_i[u]))
+                   for u in range(got.shape[0]))
+        return hits / exact_i.size
+
+    rec_s = recall(RecsysService(params, index, sp,
+                                 ServeConfig(**bench, shards=4), JK=JK))
+    rec_1 = recall(RecsysService(params, index, sp, ServeConfig(**bench),
+                                 JK=JK))
+    assert rec_s >= rec_1 - 0.01, (rec_s, rec_1)
+    print(f"sharded recall {rec_s:.3f} vs single-device {rec_1:.3f} "
+          f"(bit-exact at truncation-free settings on 128 users)")
+
+
 def check_rotation():
     from repro.core.sgd import Hyper
     from repro.data import synthetic as syn
@@ -280,5 +353,6 @@ if __name__ == "__main__":
      "moe_ep2d": check_moe_ep2d, "compression": check_compression,
      "elastic": check_elastic_restore,
      "small_dryrun": check_small_dryrun,
-     "sharded_epoch": check_sharded_epoch}[name]()
+     "sharded_epoch": check_sharded_epoch,
+     "sharded_serve": check_sharded_serve}[name]()
     print(f"PASS {name}")

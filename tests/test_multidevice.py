@@ -7,6 +7,9 @@ import sys
 
 import pytest
 
+# chaos / subprocess-heavy: CI splits these into their own step
+pytestmark = pytest.mark.slow
+
 HELPER = os.path.join(os.path.dirname(__file__), "helpers",
                       "multidev_checks.py")
 
@@ -33,6 +36,6 @@ _MISSING_DIST = pytest.mark.xfail(
     pytest.param("rotation", marks=_MISSING_DIST),
     "moe_a2a", "moe_ep2d",
     pytest.param("compression", marks=_MISSING_DIST),
-    "elastic", "small_dryrun", "sharded_epoch"])
+    "elastic", "small_dryrun", "sharded_epoch", "sharded_serve"])
 def test_multidevice(check):
     _run(check)

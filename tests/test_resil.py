@@ -33,6 +33,9 @@ from repro.serve import build_index, insert, lookup_signatures
 from repro.serve.service import RecsysService, ServeConfig
 from repro.train import checkpoint
 
+# chaos / subprocess-heavy: CI splits these into their own step
+pytestmark = pytest.mark.slow
+
 SENTINEL = topk.SENTINEL
 
 

@@ -25,6 +25,10 @@ Checks per document (dependency-free, stdlib json only):
   * ``fault_scenario`` (serve, required): the ISSUE 7 fault arm must ship
     with every serve bench — ``shed_rate``/``recall_under_fault`` in
     [0, 1], ``recover_seconds`` ≥ 0, a ``recovered`` bool;
+  * ``sharded`` (serve, required): the ISSUE 9 sharded arm — per-D QPS
+    dict including the same-window D=1 re-measure, ``scaling_ratio``,
+    recall parity fields in [0, 1], and the ``hardware_bound`` bool the
+    scaling floor keys on;
   * ``pr1_same_window`` / ``pr7_same_window`` (serve, optional): when
     present, every size entry must carry the re-measured baseline QPS
     fields — a same-window claim without numbers is not a claim.  Serve
@@ -185,6 +189,34 @@ def check_serve(doc) -> list:
         _num(fs, "p99_ratio", lo=0.0, errs=errs)
         if not isinstance(fs.get("recovered"), bool):
             errs.append("fault_scenario: recovered missing/not bool")
+    sh = doc.get("sharded")
+    if not isinstance(sh, dict):
+        errs.append("sharded: missing section (ISSUE 9: every serve bench "
+                    "run includes the D-sharded arm — per-D QPS with a "
+                    "same-window D=1 re-measure, scaling ratio, recall "
+                    "parity vs the single-device walk path)")
+    else:
+        _num(sh, "N", lo=1, errs=errs)
+        D = _num(sh, "D", lo=1, errs=errs)
+        _num(sh, "cpu_count", lo=1, errs=errs)
+        qps = sh.get("qps")
+        if not isinstance(qps, dict) or not qps:
+            errs.append("sharded.qps: missing/empty per-D QPS dict")
+        else:
+            for k in qps:
+                _num(qps, k, lo=0.0, errs=errs)
+            if "1" not in qps:
+                errs.append("sharded.qps: missing the same-window D=1 "
+                            "re-measure (scaling claims need it)")
+            if D is not None and str(int(D)) not in qps:
+                errs.append(f"sharded.qps: missing the D={int(D)} arm")
+        _num(sh, "scaling_ratio", lo=0.0, errs=errs)
+        _num(sh, "recall_sharded", lo=0.0, hi=1.0, errs=errs)
+        _num(sh, "recall_single", lo=0.0, hi=1.0, errs=errs)
+        _num(sh, "recall_delta", lo=-1.0, hi=1.0, errs=errs)
+        if not isinstance(sh.get("hardware_bound"), bool):
+            errs.append("sharded: hardware_bound missing/not bool (the "
+                        "scaling floor's meaning depends on it)")
     for section in ("pr1_same_window", "pr7_same_window"):
         base = doc.get(section)
         if base is None:
