@@ -28,9 +28,11 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.core import simlsh, topk
-from repro.core.model import Params, assemble
-from repro.core.sgd import Hyper, culsh_step, lr_decay
-from repro.data.sparse import SparseMatrix, epoch_batches, from_coo, merge_coo
+from repro.core.model import (Params, assemble, build_scheduled_data,
+                              pack_params, unpack_params)
+from repro.core.sgd import Hyper, culsh_step, lr_decay, train_epoch_scheduled
+from repro.data.sparse import (SparseMatrix, conflict_free_schedule,
+                               epoch_batches, from_coo, merge_coo)
 # direct submodule imports — repro.resil's package __init__ pulls in the WAL
 # machinery, which imports back into repro.core
 from repro.resil.guard import DivergenceError, GuardConfig, check_divergence
@@ -198,3 +200,78 @@ def online_update(st: OnlineState, new_rows, new_cols, new_vals,
                                   update_seconds=last("online.update"),
                                   delta_nnz=int(delta.nnz),
                                   merged_nnz=int(sp_all.nnz)))
+
+
+# ---------------------------------------------------------------------------
+# micro-epochs over the merged Ω̂ — the always-on loop's training workload
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MicroSchedule:
+    """Conflict-free schedule + schedule-ordered data for micro-epochs
+    over one merged Ω̂ snapshot.  Valid only for the exact `SparseMatrix`
+    it was built from (``sp`` is kept as the cache token: Ω̂ changes
+    identity on every delta merge, so the loop rebuilds lazily).  The
+    build is deterministic given (sp, batch, seed) — part of the replay
+    contract for crash-safe resume."""
+    sched: object          # data.sparse.EpochSchedule
+    sd: object             # model.ScheduledData
+    sp: SparseMatrix
+    batch: int
+    seed: int
+
+
+def build_micro_schedule(sp: SparseMatrix, JK: jax.Array, *,
+                         batch: int = 4096, seed: int = 0) -> MicroSchedule:
+    """Schedule the merged matrix for `micro_epoch` (no shard tier: the
+    loop shares one device budget with serving, so micro-epochs stay
+    single-device)."""
+    sched = conflict_free_schedule(
+        jnp.asarray(sp.rows), jnp.asarray(sp.cols),
+        batch=min(batch, max(int(sp.nnz), 1)),
+        shards=0, M=sp.M, N=sp.N, seed=seed)
+    sd = build_scheduled_data(sp, JK, sched)
+    return MicroSchedule(sched=sched, sd=sd, sp=sp, batch=batch, seed=seed)
+
+
+def micro_epoch(st: OnlineState, hp: Hyper, key, *, epoch: int = 0,
+                sched: MicroSchedule | None = None, batch: int = 4096,
+                registry: obs.Registry | None = None) -> OnlineState:
+    """One bounded scheduled training round over the merged Ω̂ — the
+    always-on loop's per-slice training unit (ISSUE 10).
+
+    Unlike `online_update` (Alg. 4: train only the grown slices on ΔΩ,
+    old parameters frozen), a micro-epoch continues training *all*
+    parameters on everything seen so far, through the offline hot path
+    (`sgd.train_epoch_scheduled` on a conflict-free schedule).  This is
+    the half of the paper's online claim Alg. 4 alone doesn't cover: the
+    model keeps converging between deltas while the service keeps
+    serving.
+
+    Deterministic given (state, key, epoch, schedule): same inputs, same
+    CPU/XLA program ⇒ bit-identical parameters — the loop logs (key,
+    epoch, rounds) to the WAL and replays micro-epochs exactly on
+    recovery.  S/JK/Ω̂ are untouched (training moves no ids), so the
+    returned state shares them with ``st``.
+    """
+    reg = registry if registry is not None else obs.scoped()
+    if sched is None or sched.sp is not st.sp:
+        with reg.span("online.micro.schedule"):
+            sched = build_micro_schedule(st.sp, st.JK, batch=batch)
+    with reg.span("online.micro"):
+        pp = pack_params(st.params)
+        # train_epoch_scheduled donates its input planes; row/col are
+        # fresh concatenates but mu aliases st.params.mu — copy it so the
+        # donation cannot delete the caller's buffer
+        pp = dataclasses.replace(pp, mu=pp.mu.copy())
+        pp = train_epoch_scheduled(pp, sched.sd, sched.sched,
+                                   jnp.asarray(key), jnp.asarray(epoch), hp)
+        p = unpack_params(pp)
+        jax.block_until_ready(p.U)
+    reg.counter_add("online.micro_epochs")
+    return OnlineState(params=p, S=st.S, JK=st.JK, sp=st.sp, M=st.M, N=st.N,
+                       hash_key=st.hash_key,
+                       stats=dict(st.stats,
+                                  micro_seconds=reg.span_durations(
+                                      "online.micro")[-1]))

@@ -1,0 +1,23 @@
+"""repro.loop — the always-on online loop (ISSUE 10).
+
+The paper's headline claim is *online* learning: CULSH-MF keeps serving
+while rating deltas stream in and the model keeps training.  PR 7 built
+the resilience primitives (WAL-backed updates, fault injection,
+validate-then-swap rebuilds, load shedding); this package is the
+supervisor that composes them into one always-on process:
+
+  * `OnlineLoop`   — a cooperative supervisor that time-slices one
+    device budget between `RecsysService` flushes and scheduled training
+    micro-epochs, with bounded staleness, ingest-queue backpressure, a
+    watchdog that degrades to frozen-model serving, drift-triggered
+    index rebuilds, and crash-safe `recover()` (bit-identical
+    `OnlineState` after kill -9 at any fault site);
+  * `LoopConfig`   — the slice scheduler's knobs.
+
+Failure semantics and the slice state machine are documented in
+docs/ARCHITECTURE.md §10; benchmarks/bench_online.py measures the loop
+under a zipf-drift stream with injected slice faults.
+"""
+from repro.loop.supervisor import LoopConfig, OnlineLoop
+
+__all__ = ["LoopConfig", "OnlineLoop"]

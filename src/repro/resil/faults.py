@@ -31,6 +31,13 @@ Registered sites (grep for ``faults.fire`` to audit):
                            atomic rename (a "crash" leaves only tmp files)
   ``online.update``        between WAL append and the state update
                            (crash-mid-ingest for WAL-replay tests)
+  ``loop.slice``           top of `OnlineLoop.run_slice`, before any
+                           phase runs (the between-slices crash window)
+  ``loop.drift``           before the drift-detection RMSE probe (reads
+                           state, never mutates it)
+  ``loop.ckpt``            before the loop's atomic progress checkpoint
+                           (a "crash" recovers from the previous cut
+                           plus the unpruned WAL suffix)
 
 Use as a context manager so a failing test can never leak a plan into
 the next one:

@@ -23,6 +23,12 @@ rejected, so guard rollbacks are replay-stable too.
 The WAL stores *inputs*, not states: an entry is a few KB of triples
 versus the full factor planes, so logging cost is O(|ΔΩ|) per update and
 the checkpoint cadence alone controls recovery time.
+
+The always-on loop (`repro.loop`, ISSUE 10) shares this log: it appends
+``kind="slice"`` entries (a slice's ΔΩ batches plus its micro-epoch
+spec) into the same seq space and owns the checkpoint cadence with a
+wider template (state + loop cursors).  `OnlineUpdater.recover` refuses
+such entries and points at `OnlineLoop.recover`, which replays both.
 """
 from __future__ import annotations
 
@@ -275,6 +281,12 @@ class OnlineUpdater:
         want = dict(K=K, epochs=epochs, batch=batch,
                     lsh=dataclasses.asdict(lsh), hp=dataclasses.asdict(hp))
         for e in up.wal.entries(after=step):
+            if e.meta.get("kind") is not None:
+                raise ValueError(
+                    f"WAL entry {e.seq} is a {e.meta['kind']!r} entry "
+                    f"written by the always-on loop — recover with "
+                    f"repro.loop.OnlineLoop.recover(), which also replays "
+                    f"micro-epochs and loop cursors")
             for k, v in want.items():
                 if e.meta.get(k) != v:
                     raise ValueError(

@@ -23,7 +23,8 @@ from repro.serve.retrieve import (compact_pool, dedup_candidates,
                                   sig_window_descriptors, tail_hits,
                                   translate_local_ids, walk_candidates,
                                   window_descriptors)
-from repro.serve.service import (RecsysService, ServeConfig, full_topn,
+from repro.serve.service import (RecsysService, ServeConfig,
+                                 ShardedIngestUnsupported, full_topn,
                                  merge_topn, popular_shortlist,
                                  recommend_candidates, recommend_walked,
                                  recommend_walked_kernel)
@@ -37,6 +38,7 @@ __all__ = [
     "seed_items", "shard_seed_sigs", "shard_walk_local",
     "sig_window_descriptors", "tail_hits", "translate_local_ids",
     "walk_candidates", "window_descriptors", "RecsysService", "ServeConfig",
+    "ShardedIngestUnsupported",
     "full_topn", "merge_topn", "popular_shortlist", "recommend_candidates",
     "recommend_walked", "recommend_walked_kernel",
 ]

@@ -73,6 +73,18 @@ from repro.serve.retrieve import (candidate_pool, enumerate_windows,
                                   window_descriptors)
 
 
+class ShardedIngestUnsupported(NotImplementedError):
+    """Online ingestion was attempted on a sharded service.  Sharded
+    serving is deliberately read-only — the per-shard index/col-plane
+    partitions are built once from a complete catalog.  Either run the
+    ingest on a single-device service (``dataclasses.replace(cfg,
+    shards=0)``) whose tail + rebuild path absorbs it and construct a
+    fresh sharded service from the grown state, or hand the full
+    signature set to `RecsysService.request_rebuild` on that
+    single-device service and re-shard from the swapped index.
+    Rejections are counted in ``serve.ingest_rejected`` (see `stats`)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     mode: str = "candidate"   # candidate | full
@@ -509,6 +521,10 @@ class RecsysService:
         self._inflight: collections.deque = collections.deque()
         self._results: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
         self._last_ready_ns = 0
+        # when the serving params were adopted (swap on online ingest) —
+        # `stats()["model_age_s"]` is the serve-behind-train staleness the
+        # always-on loop bounds (ISSUE 10)
+        self._params_adopted = time.perf_counter()
         # resilience state (ISSUE 7): background rebuild slot + host-side
         # bias mirror for the degraded popularity path (invalidated on
         # parameter swap)
@@ -668,6 +684,22 @@ class RecsysService:
             self._flush_one()
         while self._inflight:
             self._sync_oldest()
+
+    def flush_some(self, max_flushes: int) -> int:
+        """Slice-aware flush (ISSUE 10): dispatch at most ``max_flushes``
+        micro-batches, then sync everything in flight so the device is
+        idle when the caller's next phase (a training micro-epoch) starts
+        — the cooperative yield of the shared device budget.  Work beyond
+        the budget stays queued for the next slice; returns the number of
+        flushes dispatched."""
+        self._poll_rebuild()
+        n = 0
+        while self._n_pending and n < max_flushes:
+            self._flush_one()
+            n += 1
+        while self._inflight:
+            self._sync_oldest()
+        return n
 
     # ---- load shedding / degraded serving (ISSUE 7) ----
 
@@ -864,7 +896,11 @@ class RecsysService:
             dropped=int(reg.counter("serve.dropped_users")),
             fallbacks=int(reg.counter("serve.fallback_full")),
             quarantined=int(reg.counter("serve.quarantined")),
+            ingest_rejected=int(reg.counter("serve.ingest_rejected")),
             index_stale=bool(reg.gauge("serve.index_stale", 0.0)),
+            # staleness (ISSUE 10): wall-clock age of the serving params —
+            # what the always-on loop's publish cadence bounds
+            model_age_s=time.perf_counter() - self._params_adopted,
             # small-catalog routing (PR 8): the verdict is always
             # reported; `enabled` says whether _recommend acts on it
             route=self.route_decision(),
@@ -1049,6 +1085,21 @@ class RecsysService:
                 self.obs.counter_add("serve.rebuild.gave_up")
                 self._rebuild_sigs = None
 
+    def request_rebuild(self, full_sigs) -> None:
+        """Supervisor-triggered rebuild (ISSUE 10 drift detection): hand
+        the full [q, N] signature set to the background rebuilder;
+        serving continues on index v and the validated v+1 swaps in at a
+        later flush boundary (`_poll_rebuild`).  Single-device only —
+        the sharded tier is rebuilt by constructing a new service."""
+        if self._shard_state is not None:
+            self.obs.counter_add("serve.ingest_rejected")
+            raise ShardedIngestUnsupported(
+                "sharded serving is read-only: request the rebuild on a "
+                "single-device service and construct a new sharded "
+                "service from the swapped index")
+        self._poll_rebuild()
+        self._start_rebuild(full_sigs)
+
     # ---- ingestion entry points ----
 
     def ingest(self, new_sigs: jax.Array, new_ids: jax.Array,
@@ -1069,10 +1120,13 @@ class RecsysService:
         `_recommend`, so re-warm here — the retrace lands in ingestion
         time, not in the next request's latency window."""
         if self._shard_state is not None:
-            raise NotImplementedError(
-                "sharded serving is read-only: online ingest goes through "
-                "a single-device service (tail + rebuild), whose rebuilt "
-                "index a new sharded service is constructed from")
+            self.obs.counter_add("serve.ingest_rejected")
+            raise ShardedIngestUnsupported(
+                "sharded serving is read-only: apply this ingest on a "
+                "single-device service (tail insert + rebuild on "
+                "overflow) and construct a new sharded service from the "
+                "rebuilt index, or hand full_sigs to request_rebuild() "
+                "on that single-device service")
         t0_ns = time.perf_counter_ns()
         try:
             check_ingest_batch(new_sigs, new_ids, q=self.index.q)
@@ -1123,10 +1177,13 @@ class RecsysService:
         one retrace of the serving pipelines — re-warm here so the compile
         lands in ingestion time, not in a request's latency window."""
         if self._shard_state is not None:
-            raise NotImplementedError(
+            self.obs.counter_add("serve.ingest_rejected")
+            raise ShardedIngestUnsupported(
                 "sharded serving is read-only: run the online-update "
-                "handoff on a single-device service and rebuild the "
-                "sharded one from the grown state")
+                "handoff on a single-device service (shards=0) and "
+                "construct a new sharded service from the grown state — "
+                "or route the full re-signed signature set through "
+                "request_rebuild() there")
         t0_ns = time.perf_counter_ns()
         # quarantine before touching anything: NaN-poisoned accumulator
         # slabs would re-sign new columns into valid-looking garbage
@@ -1147,6 +1204,7 @@ class RecsysService:
                 "item ids must stay below 2^30 (the dedup hash mask)"
             with self.obs.span("serve.ingest_online.swap"):
                 self.params = state.params
+                self._params_adopted = time.perf_counter()
                 self.planes = model.pack_serve_planes(state.params)
                 self._host_bias = None     # degraded-path mirror is stale
                 self.sp = state.sp

@@ -1,0 +1,199 @@
+"""Fast unit tests for the always-on loop (ISSUE 10).
+
+The slice state machine's *scheduling* contracts — backpressure steals
+micro-epoch budget, lag triggers publishes, failed slices freeze instead
+of dying, the watchdog catches stalls, poison ΔΩ is quarantined before
+logging — on a tiny state.  The crash/recover contracts (kill at every
+fault site → bit-identical resume) live in tests/test_resil.py, marked
+slow with the rest of the chaos suite.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import online, simlsh, topk
+from repro.core.model import init_from_data
+from repro.core.sgd import Hyper
+from repro.data import synthetic as syn
+from repro.data.sparse import from_coo
+from repro.loop import LoopConfig, OnlineLoop
+from repro.resil import FaultSpec, OnlineUpdater, faults, wal
+from repro.serve.service import ServeConfig, ShardedIngestUnsupported
+
+SERVE = ServeConfig(topn=5, micro_batch=8, C=16, n_seeds=2, cap=4,
+                    n_popular=8)
+CFG = LoopConfig(serve_flushes=1, micro_epochs=1, micro_batch=256,
+                 deltas_per_slice=2, backpressure_queue=2, max_lag=1,
+                 ckpt_every=0, drift_every=0, watchdog_s=0.0,
+                 freeze_slices=2, tail_cap=8, seed=0)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    faults.uninstall()
+
+
+@pytest.fixture(scope="module")
+def tiny_state():
+    spec = dataclasses.replace(syn.MOVIELENS_LIKE, M=80, N=40, nnz=1200)
+    rows, cols, vals, _ = syn.generate(spec, seed=0)
+    sp = from_coo(rows, cols, vals, (spec.M, spec.N))
+    lsh = simlsh.SimLSHConfig(G=4, p=1, q=4)
+    key = jax.random.PRNGKey(0)
+    sigs, S = simlsh.encode(sp, lsh, key, return_accumulators=True)
+    JK = topk.topk_from_signatures(sigs, jax.random.PRNGKey(1), K=4,
+                                   band_cap=lsh.band_cap)
+    params = init_from_data(jax.random.PRNGKey(2), sp, 8, 4)
+    st = online.OnlineState(params=params, S=S, JK=JK, sp=sp,
+                            M=spec.M, N=spec.N, hash_key=key)
+    return st, lsh
+
+
+def _loop(tmp_path, tiny_state, cfg=CFG, **up_kw):
+    st0, lsh = tiny_state
+    up = OnlineUpdater(st0, lsh, Hyper(), root=str(tmp_path), K=4,
+                       epochs=1, batch=256, **up_kw)
+    svc = OnlineLoop.build_service(st0, SERVE, tail_cap=cfg.tail_cap)
+    return OnlineLoop(up, svc, cfg)
+
+
+def _delta(st, M_new, N_new, seed, n=120):
+    rng = np.random.default_rng(seed)
+    nr = rng.integers(0, M_new, n).astype(np.int32)
+    nc = rng.integers(0, N_new, n).astype(np.int32)
+    pair = np.unique(nr.astype(np.int64) * N_new + nc)
+    old = set((np.asarray(st.sp.rows).astype(np.int64) * N_new
+               + np.asarray(st.sp.cols)).tolist())
+    pair = np.asarray([p for p in pair.tolist() if p not in old])
+    return ((pair // N_new).astype(np.int32),
+            (pair % N_new).astype(np.int32),
+            rng.uniform(1, 5, pair.shape[0]).astype(np.float32))
+
+
+def _offer(loop, seed, grow=(4, 2)):
+    M, N = loop.state.M + grow[0], loop.state.N + grow[1]
+    nr, nc, nv = _delta(loop.state, M, N, seed=seed)
+    loop.offer_delta(nr, nc, nv, np.asarray(jax.random.PRNGKey(seed)),
+                     M_new=M, N_new=N)
+    return M, N
+
+
+def test_loop_trains_and_publishes_on_lag(tiny_state, tmp_path):
+    loop = _loop(tmp_path, tiny_state)
+    M, N = _offer(loop, seed=10)
+    loop.svc.submit(np.arange(8, dtype=np.int32))
+    loop.run_slice()
+    # max_lag=1: the slice's mutation was published within the slice
+    assert int(loop.obs.counter("loop.publishes")) == 1
+    assert int(loop.svc.params.U.shape[0]) == M
+    assert int(loop.obs.counter("online.micro_epochs")) == 1
+    assert loop.updater.seq == 1 and loop.slice_count == 1
+    assert loop.staleness_s() == 0.0
+    st = loop.svc.stats()
+    assert st["users"] == 8 and st["dropped"] == 0
+
+
+def test_loop_backpressure_steals_micro_epoch_budget(tiny_state, tmp_path):
+    loop = _loop(tmp_path, tiny_state)
+    for i in range(3):                      # depth 3 ≥ backpressure_queue 2
+        _offer(loop, seed=20 + i)
+    loop.run_slice()
+    # the slice drained ΔΩ (deltas_per_slice=2) but skipped training
+    assert int(loop.obs.counter("online.micro_epochs")) == 0
+    assert int(loop.obs.counter("online.updates")) == 2
+    loop.run_slice()                        # queue is shallow again → train
+    assert int(loop.obs.counter("online.micro_epochs")) == 1
+
+
+def test_loop_degrades_to_frozen_serving_on_fault(tiny_state, tmp_path):
+    loop = _loop(tmp_path, tiny_state)
+    loop.svc.submit(np.arange(8, dtype=np.int32))
+    with faults.injected({"loop.slice": FaultSpec(at_calls=(1,))}):
+        loop.run(3, degrade=True)           # slice 1 dies → freeze
+    assert int(loop.obs.counter("loop.slice_failures")) == 1
+    assert int(loop.obs.counter("loop.freezes")) == 1
+    assert loop.slice_count == 2            # the failed slice didn't count
+    st = loop.svc.stats()
+    assert st["users"] == 8 and st["dropped"] == 0
+    # the freeze expires and training resumes
+    _offer(loop, seed=30)
+    loop.run(3, degrade=True)
+    assert int(loop.obs.counter("online.micro_epochs")) >= 1
+
+
+def test_loop_watchdog_trips_on_stalled_slice(tiny_state, tmp_path):
+    cfg = dataclasses.replace(CFG, watchdog_s=0.005)
+    loop = _loop(tmp_path, tiny_state, cfg=cfg)
+    with faults.injected({"loop.slice": FaultSpec(
+            kind="stall", stall_s=0.05, at_calls=(0,))}):
+        loop.run_slice()
+    assert int(loop.obs.counter("loop.watchdog_trips")) == 1
+    assert loop._frozen > 0
+
+
+def test_loop_quarantines_poison_delta_before_logging(tiny_state, tmp_path):
+    loop = _loop(tmp_path, tiny_state)
+    st0 = loop.state
+    nr = np.array([1, 2], np.int32)
+    loop.offer_delta(nr, nr, np.array([np.nan, 1.0], np.float32),
+                     np.asarray(jax.random.PRNGKey(0)),
+                     M_new=st0.M, N_new=st0.N)
+    loop.run_slice()
+    assert int(loop.obs.counter("loop.quarantined")) == 1
+    assert loop.state.M == st0.M            # the poison never applied …
+    entries = loop.updater.wal.entries(after=0)
+    assert all(e.meta["n_deltas"] == 0 for e in entries)  # … nor logged
+
+
+def test_flush_some_bounds_dispatches(tiny_state, tmp_path):
+    loop = _loop(tmp_path, tiny_state)
+    svc = loop.svc
+    svc.submit(np.arange(4, dtype=np.int32))   # below micro_batch: queued
+    assert svc.stats()["queue"] == 4
+    assert svc.flush_some(2) == 1              # one padded partial dispatch
+    assert svc.flush_some(2) == 0              # nothing left pending
+    assert svc.stats()["queue"] == 0
+    assert svc.stats()["users"] == 4
+
+
+def test_loop_refuses_sharded_service_and_typed_ingest_error(
+        tiny_state, tmp_path):
+    loop = _loop(tmp_path, tiny_state)
+    svc, st0 = loop.svc, loop.state
+    svc._shard_state = (None, None, None, 2)         # pose as the D=2 tier
+    with pytest.raises(ValueError, match="single-device"):
+        OnlineLoop(loop.updater, svc, CFG)
+    with pytest.raises(ShardedIngestUnsupported):
+        svc.ingest_online_update(st0, N_old=st0.N)
+    with pytest.raises(ShardedIngestUnsupported):
+        svc.request_rebuild(simlsh.pack_bits(st0.S >= 0))
+    assert svc.stats()["ingest_rejected"] == 2
+
+
+def test_online_updater_recover_refuses_loop_entries(tiny_state, tmp_path):
+    st0, lsh = tiny_state
+    loop = _loop(tmp_path, tiny_state)
+    _offer(loop, seed=40)
+    loop.run_slice()                        # writes one kind="slice" entry
+    with pytest.raises(ValueError, match="OnlineLoop.recover"):
+        OnlineUpdater.recover(str(tmp_path), lsh, Hyper(), K=4, epochs=1,
+                              batch=256, base_state=st0)
+
+
+def test_loop_checkpoint_carries_cursors(tiny_state, tmp_path):
+    cfg = dataclasses.replace(CFG, ckpt_every=1)
+    loop = _loop(tmp_path, tiny_state, cfg=cfg)
+    _offer(loop, seed=50)
+    loop.run_slice()
+    assert int(loop.obs.counter("loop.ckpts")) == 1
+    assert loop.updater.wal.seqs() == []    # pruned up to the cut
+    st0, lsh = tiny_state
+    rec = OnlineLoop.recover(str(tmp_path), lsh, Hyper(), SERVE, K=4,
+                             epochs=1, batch=256, cfg=cfg)
+    assert rec.slice_count == 1 and rec._micro == 1
+    for k, a in wal.state_tree(loop.state).items():
+        b = wal.state_tree(rec.state)[k]
+        assert np.array_equal(np.asarray(a), np.asarray(b)), k

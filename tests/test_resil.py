@@ -576,3 +576,136 @@ def test_service_corrupt_rebuild_is_rejected_by_validation(serving):
         "a corrupt build must be caught by the validation gate, never served"
     assert svc._rebuilder.failures == 3
     assert resil.validate_index(svc.index) == []
+
+
+# ---------------------------------------------------------------- loop (ISSUE 10)
+
+from repro.loop import LoopConfig, OnlineLoop  # noqa: E402
+
+LOOP_SERVE = ServeConfig(topn=5, micro_batch=8, C=32, n_seeds=4, cap=8,
+                         n_popular=16)
+LOOP_CFG = LoopConfig(serve_flushes=2, micro_epochs=1, micro_batch=512,
+                      deltas_per_slice=2, max_lag=2, ckpt_every=2,
+                      drift_every=2, drift_window=4, tail_cap=16, seed=0)
+
+
+def _loop(root, online_state):
+    st0, lsh = online_state
+    up = wal.OnlineUpdater(st0, lsh, Hyper(), root=str(root), K=8, epochs=1,
+                           batch=512)
+    svc = OnlineLoop.build_service(st0, LOOP_SERVE,
+                                   tail_cap=LOOP_CFG.tail_cap)
+    hold = (np.asarray(st0.sp.rows)[:200], np.asarray(st0.sp.cols)[:200],
+            np.asarray(st0.sp.vals)[:200])
+    return OnlineLoop(up, svc, LOOP_CFG, holdout=hold)
+
+
+def _drive_loop(loop, n_slices, kill_site=None, kill_call=0):
+    """Deterministic slice schedule (fixed seeds for traffic, ΔΩ and
+    keys) so the killed arm replays the reference arm's stream exactly.
+    Returns (killed, {seq: state_after_slice})."""
+    M, N = loop.state.M, loop.state.N
+    snaps = {}
+    plan = None
+    if kill_site:
+        plan = faults.install(resil.FaultPlan(
+            {kill_site: resil.FaultSpec(at_calls=(kill_call,))}))
+    try:
+        for s in range(n_slices):
+            rng = np.random.default_rng(500 + s)
+            loop.svc.submit(rng.integers(0, M, 16).astype(np.int32))
+            if s % 2 == 0:
+                M, N = M + 4, N + 2
+                nr, nc, nv = _delta(loop.state, M, N, seed=1000 + s)
+                loop.offer_delta(nr, nc, nv,
+                                 np.asarray(jax.random.PRNGKey(70 + s)),
+                                 M_new=M, N_new=N)
+            try:
+                loop.run_slice()
+            except resil.InjectedFault:
+                return True, snaps
+            snaps[loop.updater.seq] = loop.state
+        return False, snaps
+    finally:
+        if plan is not None:
+            faults.uninstall()
+
+
+@pytest.fixture(scope="module")
+def loop_reference(online_state, tmp_path_factory):
+    """The uninterrupted 6-slice arm every kill scenario is compared
+    against: state snapshots keyed by WAL seq."""
+    loop = _loop(tmp_path_factory.mktemp("loop-ref"), online_state)
+    killed, snaps = _drive_loop(loop, 6)
+    assert not killed and loop.updater.seq >= 3
+    return snaps
+
+
+@pytest.mark.parametrize("site,call", [
+    ("loop.slice", 3),     # between slices, before anything runs
+    ("loop.ckpt", 1),      # before the 2nd durable cut — resume = 1st
+                           # checkpoint + unpruned WAL suffix
+    ("loop.drift", 1),     # mid-slice, after train, before the probe
+])
+def test_loop_kill_at_site_recovers_bit_identical(online_state,
+                                                  loop_reference, tmp_path,
+                                                  site, call):
+    st0, lsh = online_state
+    loop = _loop(tmp_path, online_state)
+    killed, _ = _drive_loop(loop, 6, kill_site=site, kill_call=call)
+    assert killed, f"fault at {site} never fired"
+    del loop                                # the killed process
+
+    rec = OnlineLoop.recover(str(tmp_path), lsh, Hyper(), LOOP_SERVE, K=8,
+                             epochs=1, batch=512, cfg=LOOP_CFG,
+                             base_state=st0)
+    assert rec.updater.seq in loop_reference, \
+        (site, rec.updater.seq, sorted(loop_reference))
+    _assert_states_bit_identical(rec.state, loop_reference[rec.updater.seq])
+    # the recovered loop keeps going: serve + train a fresh slice
+    rec.svc.submit(np.arange(16, dtype=np.int32))
+    rec.run_slice()
+    st = rec.svc.stats()
+    assert st["users"] >= 16 and st["dropped"] == 0
+
+
+def test_loop_recovered_service_sheds_but_answers_everyone(online_state,
+                                                           tmp_path):
+    """After a kill + recover, an overload burst degrades (popularity
+    answers) — it never drops: shed ≠ lost survives the crash."""
+    st0, lsh = online_state
+    loop = _loop(tmp_path, online_state)
+    killed, _ = _drive_loop(loop, 6, kill_site="loop.ckpt", kill_call=1)
+    assert killed
+    serve = dataclasses.replace(LOOP_SERVE, max_pending=12)
+    rec = OnlineLoop.recover(str(tmp_path), lsh, Hyper(), serve, K=8,
+                             epochs=1, batch=512, cfg=LOOP_CFG,
+                             base_state=st0)
+    rec.svc.submit(np.arange(30, dtype=np.int32))   # burst 30 > bound 12
+    rec.run_slice()
+    rec.svc.flush()
+    st = rec.svc.stats()
+    assert st["users"] == 30 and st["degraded"] > 0 and st["dropped"] == 0
+
+
+def test_loop_slice_guard_rolls_back_whole_slice(online_state, tmp_path):
+    """A diverging micro-epoch rejects the *slice's* WAL entry: the state
+    is exactly pre-slice, and replay re-trips to the same rejection."""
+    st0, lsh = online_state
+    up = wal.OnlineUpdater(st0, lsh, Hyper(), root=str(tmp_path), K=8,
+                           epochs=1, batch=512,
+                           guard=resil.GuardConfig(max_ratio=1e-9))
+    svc = OnlineLoop.build_service(st0, LOOP_SERVE,
+                                   tail_cap=LOOP_CFG.tail_cap)
+    loop = OnlineLoop(up, svc, LOOP_CFG)
+    pre = loop.state
+    loop.run_slice()                        # micro-epoch trips the guard
+    assert int(loop.obs.counter("loop.guard_trips")) == 1
+    assert loop.state is pre, "rollback must restore the pre-slice state"
+    assert loop.updater.seq == 1            # the entry is logged regardless
+    rec = OnlineLoop.recover(str(tmp_path), lsh, Hyper(), LOOP_SERVE, K=8,
+                             epochs=1, batch=512, cfg=LOOP_CFG,
+                             guard=resil.GuardConfig(max_ratio=1e-9),
+                             base_state=st0)
+    assert rec.updater.seq == 1             # replay re-trips, stays rejected
+    _assert_states_bit_identical(rec.state, pre)

@@ -1,8 +1,9 @@
 """Bench-artifact gate: validate BENCH_*.json documents against the
 schema the rest of the repo (CI, docs, PR claims) relies on.
 
-The two benchmarks write structured JSON (``bench_train.py`` →
-BENCH_train.json, ``bench_serve.py`` → BENCH_serve.json).  Their shape is
+The benchmarks write structured JSON (``bench_train.py`` →
+BENCH_train.json, ``bench_serve.py`` → BENCH_serve.json,
+``bench_online.py`` → BENCH_online.json).  Their shape is
 a contract: `--check` floors read them, docs/ARCHITECTURE.md cites them,
 and cross-PR speedup claims diff them.  This tool fails fast when a
 refactor silently drops or renames a field, so a bench JSON that CI
@@ -29,6 +30,11 @@ Checks per document (dependency-free, stdlib json only):
     dict including the same-window D=1 re-measure, ``scaling_ratio``,
     recall parity fields in [0, 1], and the ``hardware_bound`` bool the
     scaling floor keys on;
+  * ``bench_online`` (ISSUE 10): the fault-free drift arm (monotone
+    ``rmse_over_time`` windows, staleness p99 ≥ 0), the per-site kill +
+    recover arm (``recovered``/``state_bit_identical`` bools,
+    ``rejoin_slices`` ≥ 0, ``dropped`` == 0) and the oracle recall trio
+    in [0, 1];
   * ``pr1_same_window`` / ``pr7_same_window`` (serve, optional): when
     present, every size entry must carry the re-measured baseline QPS
     fields — a same-window claim without numbers is not a claim.  Serve
@@ -232,7 +238,69 @@ def check_serve(doc) -> list:
     return errs
 
 
-CHECKERS = {"bench_train": check_train, "bench_serve": check_serve}
+def _rmse_curve(owner, curve, prefix, errs) -> None:
+    """``rmse_over_time`` contract: a non-empty list of {slice, rmse}
+    windows whose slice indices are strictly increasing (a shuffled or
+    duplicated curve means two arms got merged) and whose RMSEs are
+    finite positives."""
+    if not isinstance(curve, list) or not curve:
+        errs.append(f"{prefix}.rmse_over_time: missing or empty")
+        return
+    prev = None
+    for i, c in enumerate(curve):
+        if not isinstance(c, dict):
+            errs.append(f"{prefix}.rmse_over_time[{i}]: not an object")
+            continue
+        s = _num(c, "slice", lo=0, errs=errs)
+        _num(c, "rmse", lo=0.0, errs=errs)
+        if s is not None and prev is not None and s <= prev:
+            errs.append(f"{prefix}.rmse_over_time[{i}]: slice {s} not "
+                        f"after {prev} (windows must be monotone)")
+        prev = s if s is not None else prev
+
+
+def check_online(doc) -> list:
+    errs: list = []
+    _meta(doc, "bench_online", errs)
+    ff = doc.get("fault_free")
+    if not isinstance(ff, dict):
+        errs.append("fault_free: missing section (the drift-arm baseline "
+                    "every fault comparison is made against)")
+    else:
+        for f in ("slices", "publishes", "micro_epochs"):
+            _num(ff, f, lo=1, errs=errs)
+        for f in ("seconds", "staleness_p99_s", "staleness_max_s",
+                  "rmse_first", "rmse_last", "ckpts", "drift_rebuilds",
+                  "users", "qps", "degraded", "dropped"):
+            _num(ff, f, lo=0.0, errs=errs)
+        _rmse_curve(ff, ff.get("rmse_over_time"), "fault_free", errs)
+    fa = doc.get("fault")
+    sites = fa.get("sites") if isinstance(fa, dict) else None
+    if not isinstance(sites, list) or not sites:
+        errs.append("fault.sites: missing or empty (ISSUE 10: the kill + "
+                    "recover arm ships with every online bench)")
+    else:
+        for e in sites:
+            p = f"fault.sites[{e.get('site', '?')}]"
+            if not isinstance(e.get("site"), str):
+                errs.append(f"{p}: site missing/not str")
+            for f in ("killed", "recovered", "state_bit_identical"):
+                if not isinstance(e.get(f), bool):
+                    errs.append(f"{p}: {f} missing/not bool")
+            if e.get("recovered"):
+                _num(e, "recover_seconds", lo=0.0, errs=errs)
+                _num(e, "rejoin_slices", lo=0, errs=errs)
+                _num(e, "wal_replayed", lo=0, errs=errs)
+                _num(e, "dropped", lo=0, hi=0, errs=errs)
+                _rmse_curve(e, e.get("rmse_over_time"), p, errs)
+    _num(doc, "recall_under_drift", lo=0.0, hi=1.0, errs=errs)
+    _num(doc, "recall_oracle", lo=0.0, hi=1.0, errs=errs)
+    _num(doc, "recall_delta", lo=0.0, hi=1.0, errs=errs)
+    return errs
+
+
+CHECKERS = {"bench_train": check_train, "bench_serve": check_serve,
+            "bench_online": check_online}
 
 
 def check_file(path: str) -> list:
